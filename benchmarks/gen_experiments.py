@@ -1,0 +1,81 @@
+"""Generate the EXPERIMENTS.md roofline/dry-run tables from sweep JSONs.
+
+    PYTHONPATH=src python -m benchmarks.gen_experiments
+prints markdown tables for the baseline (experiments/dryrun) and optimized
+(experiments/dryrun_opt) sweeps.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARCH_ORDER = ["llama4-scout-17b-a16e", "mixtral-8x7b", "xlstm-350m",
+              "qwen1.5-4b", "granite-8b", "qwen1.5-0.5b", "smollm-360m",
+              "recurrentgemma-2b", "hubert-xlarge", "qwen2-vl-72b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirname, mesh):
+    out = {}
+    d = Path(dirname)
+    if not d.exists():
+        return out
+    for f in d.glob("*.json"):
+        r = json.loads(f.read_text())
+        if r.get("mesh") == mesh:
+            out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.1f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def table(dirname, mesh="16x16", title=""):
+    recs = load(dirname, mesh)
+    lines = [f"\n#### {title} ({mesh} mesh)\n",
+             "| arch | shape | compute | memory | collective | bound | "
+             "useful | GiB/dev | fits |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s))
+            if r is None:
+                continue
+            if not r.get("supported", True):
+                lines.append(f"| {a} | {s} | — | — | — | skipped | — | — | "
+                             f"{r['reason'][:46]} |")
+                continue
+            lines.append(
+                f"| {a} | {s} | {fmt_s(r['compute_s'])} | "
+                f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+                f"{r['bound']} | {r['useful_ratio']:.2f} | "
+                f"{r['total_dev_bytes']/2**30:.1f} | "
+                f"{'Y' if r['fits_hbm'] else 'N'} |")
+    return "\n".join(lines)
+
+
+def multi_pod_deltas(dirname):
+    base = load(dirname, "16x16")
+    multi = load(dirname, "2x16x16")
+    lines = ["\n#### multi-pod (2x16x16) vs single-pod: collective term\n",
+             "| arch | shape | coll 1-pod | coll 2-pod | ratio |",
+             "|---|---|---|---|---|"]
+    for key in sorted(base):
+        b, m = base[key], multi.get(key)
+        if m is None or not b.get("supported", True):
+            continue
+        r = m["collective_s"] / max(b["collective_s"], 1e-12)
+        lines.append(f"| {key[0]} | {key[1]} | {fmt_s(b['collective_s'])} | "
+                     f"{fmt_s(m['collective_s'])} | {r:.2f}x |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(table("experiments/dryrun", title="Paper-faithful baseline"))
+    print(table("experiments/dryrun_opt",
+                title="Optimized (grouped MoE dispatch + attention "
+                      "checkpointing + GQA head sharding)"))
+    print(multi_pod_deltas("experiments/dryrun_opt"))

@@ -1,0 +1,53 @@
+"""§Roofline table: read the dry-run JSON records and emit the per-cell
+three-term roofline (the EXPERIMENTS.md source of truth)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def load_records(mesh="16x16"):
+    recs = []
+    if not DRYRUN_DIR.exists():
+        return recs
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def roofline_table(emit, mesh="16x16"):
+    recs = load_records(mesh)
+    if not recs:
+        emit("roofline/missing", 0.0,
+             "run `python -m repro.launch.dryrun --all --both-meshes` first")
+        return
+    for r in recs:
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        if not r.get("supported", True):
+            emit(name, 0.0, f"skipped: {r['reason']}")
+            continue
+        step_ms = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e3
+        emit(name, step_ms * 1e3,
+             f"compute_ms={r['compute_s']*1e3:.2f} "
+             f"memory_ms={r['memory_s']*1e3:.2f} "
+             f"collective_ms={r['collective_s']*1e3:.2f} "
+             f"bound={r['bound']} useful_ratio={r['useful_ratio']:.2f} "
+             f"mem_dev_GiB={r['total_dev_bytes']/2**30:.2f} "
+             f"fits={r['fits_hbm']}")
+
+
+def summary(emit, mesh="16x16"):
+    recs = [r for r in load_records(mesh) if r.get("supported", True)]
+    if not recs:
+        return
+    bounds = {}
+    fits = 0
+    for r in recs:
+        bounds[r["bound"]] = bounds.get(r["bound"], 0) + 1
+        fits += bool(r["fits_hbm"])
+    emit("roofline/summary", 0.0,
+         f"cells={len(recs)} fits_hbm={fits} bound_histogram={bounds}")

@@ -1,0 +1,47 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Usage:
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+``--fast`` skips the O(n^2) cycle simulations (xcorr/parallel_sel).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+
+    def emit(name, us, derived=""):
+        print(f"{name},{us:.3f},{derived}")
+
+    print("name,us_per_call,derived")
+    from benchmarks import ggpu_tables, roofline_table
+    ggpu_tables.table1_ppa(emit)
+    ggpu_tables.table2_wires(emit)
+    if not fast:
+        ggpu_tables.simulate_all(verbose=False)
+    if fast:
+        # shrink the quadratic kernels for a quick pass
+        from repro.ggpu import programs
+        b = programs.all_benches()
+        small = programs._xcorr(64, 512)
+        b["xcorr"] = small
+        ggpu_tables._cycle_cache.clear()
+    ggpu_tables.table3_cycles(emit)
+    ggpu_tables.fig5_speedup(emit)
+    ggpu_tables.fig6_area_derated(emit)
+    import benchmarks.roofline_table as rt
+    rt.DRYRUN_DIR = __import__("pathlib").Path("experiments/dryrun")
+    emit("roofline/baseline", 0.0, "paper-faithful baseline sweep")
+    roofline_table.roofline_table(emit)
+    roofline_table.summary(emit)
+    rt.DRYRUN_DIR = __import__("pathlib").Path("experiments/dryrun_opt")
+    emit("roofline/optimized", 0.0,
+         "optimized sweep (EXPERIMENTS.md \u00a7Perf)")
+    roofline_table.roofline_table(emit)
+    roofline_table.summary(emit)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Run the paper's micro-benchmarks on the simulated G-GPU.
+
+    PYTHONPATH=src python examples/ggpu_simulate.py --kernel mat_mul --cus 4
+"""
+import argparse
+
+import numpy as np
+
+from repro.ggpu.machine import GGPUConfig, ScalarConfig, run_kernel
+from repro.ggpu.programs import all_benches
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kernel", default="mat_mul",
+                    choices=sorted(all_benches()))
+    ap.add_argument("--cus", type=int, default=4, choices=(1, 2, 4, 8))
+    args = ap.parse_args()
+
+    b = all_benches()[args.kernel]
+    print(f"kernel={args.kernel} items={b.gpu_items} CUs={args.cus}")
+    mem, info = run_kernel(b.gpu_prog, b.gpu_mem, b.gpu_items,
+                           GGPUConfig(n_cus=args.cus))
+    ok = np.array_equal(mem[b.gpu_out], b.ref(b.gpu_mem, b.gpu_n))
+    print(f"G-GPU : {info['cycles']:>9d} cycles "
+          f"({info['time_us']:.1f} us @500MHz)  "
+          f"cache hits/misses={info['hits']}/{info['misses']}  correct={ok}")
+    mem, si = run_kernel(b.scalar_prog, b.scalar_mem, 1, ScalarConfig())
+    ok = np.array_equal(mem[b.scalar_out], b.ref(b.scalar_mem, b.scalar_n))
+    print(f"RISC-V: {si['cycles']:>9d} cycles (input {b.scalar_n} vs "
+          f"{b.gpu_n})  correct={ok}")
+    ratio = b.gpu_n / b.scalar_n
+    print(f"paper-style speed-up (input-scaled): "
+          f"{si['cycles'] * ratio / info['cycles']:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

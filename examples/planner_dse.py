@@ -1,0 +1,46 @@
+"""GPUPlanner + MeshPlanner design-space exploration walkthrough.
+
+    PYTHONPATH=src python examples/planner_dse.py
+"""
+from repro.configs import get_config
+from repro.core.meshplanner import plan as mesh_plan
+from repro.core.planner import enumerate_versions, plan
+from repro.models.config import SHAPES
+
+
+def main():
+    print("=== GPUPlanner: the paper's map (1 CU @ 667 MHz) ===")
+    p = plan(1, 667.0)
+    for e in p.map_log:
+        print(f"  it{e.iteration}: fmax={e.fmax_mhz:6.0f} MHz "
+              f"bottleneck={e.bottleneck:22s} -> {e.action}")
+    r = p.version.report()
+    print(f"  result: {r['total_area_mm2']} mm^2, {r['n_memory']} memory "
+          f"blocks, {r['total_w']} W")
+
+    print("\n=== the paper's failure case: 8 CU @ 667 MHz ===")
+    p8 = plan(8, 667.0)
+    print(f"  achieved={p8.achieved}: {p8.reason}")
+
+    print("\n=== the 12-version Table I sweep ===")
+    for pv in enumerate_versions():
+        r = pv.version.report()
+        print(f"  {r['n_cus']}CU: fmax={r['fmax_mhz']:6.1f} "
+              f"area={r['total_area_mm2']:6.2f}mm^2 mem={r['n_memory']:3d} "
+              f"power={r['total_w']:5.2f}W")
+
+    print("\n=== MeshPlanner: same loop, TPU pod target ===")
+    for arch, shape in [("qwen2-vl-72b", "train_4k"),
+                        ("mixtral-8x7b", "train_4k"),
+                        ("granite-8b", "decode_32k")]:
+        mp = mesh_plan(get_config(arch), SHAPES[shape])
+        e = mp.estimate
+        print(f"  {arch} x {shape}: fits={mp.fits} knobs=(remat={mp.knobs.remat},"
+              f" mb={mp.knobs.microbatches}, fsdp={mp.knobs.fsdp}) "
+              f"est {e.total_bytes/2**30:.1f} GiB, bound={e.bound()}")
+        for ent in mp.map_log[:-1]:
+            print(f"      it{ent.iteration}: {ent.action}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Quickstart: build a small model, train a few steps, generate text.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import get_smoke
+from repro.data.pipeline import DataConfig
+from repro.optim import adamw
+from repro.serve.engine import Engine, EngineConfig
+from repro.train.trainer import Trainer, TrainConfig
+
+
+def main():
+    cfg = get_smoke("smollm-360m")
+    print(f"arch: {cfg.name}  layers={cfg.n_layers} d_model={cfg.d_model}")
+
+    hp = adamw.AdamWConfig(lr=1e-2, warmup_steps=5, total_steps=60)
+    tc = TrainConfig(steps=40, save_every=20, log_every=10,
+                     ckpt_dir="/tmp/quickstart_ckpt")
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+    trainer = Trainer(cfg, hp, tc, dc)
+    result = trainer.run()
+    print(f"final loss: {result['final_loss']:.4f}")
+
+    engine = Engine(cfg, result["params"], EngineConfig(slots=2))
+    outs = engine.generate([[1, 2, 3], [7, 8]], max_new=8)
+    print("generated:", outs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""End-to-end training driver: train a ~100M-class model for a few hundred
+steps with checkpointing and resume.
+
+    PYTHONPATH=src python examples/train_lm.py --arch smollm-360m \
+        --steps 300 --d-model 512 --layers 8
+
+Any assigned architecture id works (--arch); by default a width/depth-
+reduced variant of it is trained so the run fits a CPU box. Kill it at any
+point and re-run: it resumes from the last checkpoint, bit-identically.
+"""
+import argparse
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data.pipeline import DataConfig
+from repro.optim import adamw
+from repro.train.trainer import Trainer, TrainConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--heads", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--lr", type=float, default=6e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/train_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).replace(
+        n_layers=args.layers, d_model=args.d_model, n_heads=args.heads,
+        n_kv_heads=max(1, args.heads // 2), d_ff=4 * args.d_model
+        if get_config(args.arch).d_ff else 0,
+        vocab_size=args.vocab, head_dim=0, lru_width=0,
+        window=min(get_config(args.arch).window, args.seq_len)
+        if get_config(args.arch).window else 0)
+    n_params = cfg.n_params()
+    print(f"training {cfg.name}-reduced: {n_params/1e6:.1f}M params")
+
+    hp = adamw.AdamWConfig(lr=args.lr, warmup_steps=30,
+                           total_steps=args.steps, weight_decay=0.1)
+    tc = TrainConfig(steps=args.steps, save_every=100, log_every=10,
+                     ckpt_dir=args.ckpt_dir)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                    global_batch=args.batch)
+    result = Trainer(cfg, hp, tc, dc).run()
+    print(f"done: final loss {result['final_loss']:.4f} "
+          f"after {result['steps']} steps")
+
+
+if __name__ == "__main__":
+    main()

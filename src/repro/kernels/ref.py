@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are deliberately naive O(S^2)/sequential implementations — no
+blocking, no online softmax — so a kernel bug cannot be masked by shared
+structure.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool, window: int, scale: float):
+    """q: (BH, Sq, hd); k, v: (BHkv, Skv, hd) with BH = BHkv * G.
+    Naive full-matrix masked softmax attention, f32."""
+    bh, sq, hd = q.shape
+    bhkv, skv, _ = k.shape
+    g = bh // bhkv
+    qf = q.reshape(bhkv, g, sq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bgqd,bkd->bgqk", qf, kf) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgqk,bkd->bgqd", p, vf)
+    return o.reshape(bh, sq, hd).astype(q.dtype)
+
+
+def rglru_scan_ref(a, b, h0):
+    """Sequential h_t = a_t * h_{t-1} + b_t. a, b: (B, S, D) f32; h0: (B, D).
+    Returns (h (B,S,D), h_final)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    a_t = jnp.moveaxis(a, 1, 0)
+    b_t = jnp.moveaxis(b, 1, 0)
+    h_f, hs = jax.lax.scan(step, h0, (a_t, b_t))
+    return jnp.moveaxis(hs, 0, 1), h_f
+
+
+def pe_alu_ref(op, a, b, imm):
+    """Reference G-GPU PE ALU (one opcode per wavefront row).
+    op: (W, 1) int32; a, b: (W, L); imm: (W, 1). Mirrors isa semantics."""
+    from repro.ggpu import isa
+    sh = jnp.clip(b, 0, 31)
+    shi = jnp.clip(imm, 0, 31)
+    au = a.astype(jnp.uint32)
+    b_safe = jnp.where(b == 0, 1, b)
+    a_lo, a_hi = a & 0xFFFF, a >> 16
+    b_lo, b_hi = b & 0xFFFF, b >> 16
+    t1 = (a_lo * b_lo).astype(jnp.uint32) >> 16
+    t2 = a_hi * b_lo + t1.astype(jnp.int32)
+    t3 = a_lo * b_hi + (t2 & 0xFFFF)
+    mulh = a_hi * b_hi + (t2 >> 16) + (t3 >> 16)
+    out = jnp.zeros_like(a)
+    table = {
+        isa.ADD: a + b, isa.SUB: a - b, isa.MUL: a * b, isa.MULH: mulh,
+        isa.DIV: jnp.where(b == 0, 0, a // b_safe),
+        isa.REM: jnp.where(b == 0, 0, a % b_safe),
+        isa.AND: a & b, isa.OR: a | b, isa.XOR: a ^ b,
+        isa.SLL: a << sh,
+        isa.SRL: (au >> sh.astype(jnp.uint32)).astype(jnp.int32),
+        isa.SRA: a >> sh,
+        isa.SLT: (a < b).astype(jnp.int32),
+        isa.ADDI: a + imm, isa.ANDI: a & imm, isa.ORI: a | imm,
+        isa.XORI: a ^ imm, isa.SLLI: a << shi,
+        isa.SRLI: (au >> shi.astype(jnp.uint32)).astype(jnp.int32),
+        isa.SRAI: a >> shi, isa.SLTI: (a < imm).astype(jnp.int32),
+        isa.LUI: jnp.broadcast_to(imm << 12, a.shape),
+    }
+    for code, val in table.items():
+        out = jnp.where(op == code, val, out)
+    return out

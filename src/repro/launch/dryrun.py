@@ -1,0 +1,173 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and emit roofline terms.
+
+The two lines above MUST stay the first statements in this file: jax locks
+the device count on first init, and smoke tests / benches elsewhere must
+keep seeing 1 CPU device (this env var is set only in this process).
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+
+Per cell this prints ``compiled.memory_analysis()`` (proves the program
+fits per-device HBM) and ``compiled.cost_analysis()`` (FLOPs/bytes for
+EXPERIMENTS.md §Roofline), and writes a JSON record.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.models.config import SHAPES, cell_supported
+from repro.models.steps import (make_decode_step, make_encode_step,
+                                make_prefill_step, make_train_step)
+from repro.optim.adamw import AdamWConfig
+from repro.roofline import analysis as RL
+from repro.sharding import set_rules
+from repro.sharding.rules import make_rules, opt_state_shardings, param_shardings
+
+
+def build_step(cfg, shape):
+    """Returns (fn, donate_argnums)."""
+    if shape.kind == "train":
+        return make_train_step(cfg, AdamWConfig()), (0, 1)
+    if shape.kind == "prefill":
+        if cfg.is_encoder_only:
+            return make_encode_step(cfg), ()
+        return make_prefill_step(cfg), ()
+    return make_decode_step(cfg), (1,)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             remat: str = None, microbatches: int = 1, fsdp: bool = True,
+             seq_shard: bool = True, seq_attn_min_s: int = 16384,
+             out_dir: Path = None, verbose: bool = True):
+    cfg = get_config(arch)
+    if remat:
+        cfg = cfg.replace(remat=remat)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_supported(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "supported": ok, "reason": reason}
+    if not ok:
+        if verbose:
+            print(f"[skip] {arch} x {shape_name}: {reason}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh, fsdp=fsdp, seq_shard=seq_shard,
+                       seq_attn_min_s=seq_attn_min_s)
+    step, donate = build_step(cfg, shape)
+    if shape.kind == "train" and microbatches > 1:
+        step = make_train_step(cfg, AdamWConfig(), microbatches=microbatches)
+
+    t0 = time.time()
+    with set_rules(rules), mesh:
+        args = input_specs(cfg, shape, rules)
+        out_sh = None
+        if shape.kind == "train":
+            psh = param_shardings(rules, cfg)
+            osh = opt_state_shardings(rules, cfg)
+            scalar = rules.named(jax.sharding.PartitionSpec())
+            out_sh = (psh, osh,
+                      {"grad_norm": scalar, "lr": scalar, "loss": scalar})
+        elif shape.kind == "decode":
+            # cache round-trips with identical shardings so donation aliases
+            # (otherwise XLA reshards the output and doubles decode memory)
+            from repro.sharding.rules import cache_shardings
+            logits_sh = rules.named(rules.activation_spec(
+                "logits", (shape.global_batch, cfg.vocab_size)))
+            out_sh = (logits_sh, cache_shardings(rules, args[1]))
+        jitted = jax.jit(step, donate_argnums=donate, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mf = RL.model_flops_estimate(cfg, shape)
+    roof = RL.analyze(compiled, model_flops_total=mf,
+                      n_devices=mesh.devices.size)
+    ma = compiled.memory_analysis()
+    fits = (roof.arg_bytes + roof.temp_bytes + roof.out_bytes) <= RL.HBM_PER_CHIP
+    rec.update(roof.asdict(), lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1), n_devices=int(mesh.devices.size),
+               fits_hbm=bool(fits),
+               total_dev_bytes=int(roof.arg_bytes + roof.temp_bytes
+                                   + roof.out_bytes))
+    if verbose:
+        print(f"[ok] {arch} x {shape_name} ({rec['mesh']}): "
+              f"compute={roof.compute_s*1e3:.2f}ms memory={roof.memory_s*1e3:.2f}ms "
+              f"collective={roof.collective_s*1e3:.2f}ms bound={roof.bound} "
+              f"useful={roof.useful_ratio:.2f} "
+              f"mem/dev={(rec['total_dev_bytes'])/2**30:.2f}GiB fits={fits} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print(f"     memory_analysis: {ma}")
+        print(f"     cost_analysis: flops={roof.flops:.3e} bytes={roof.bytes_hbm:.3e}")
+        print(f"     collectives: {dict(roof.collectives.counts)}")
+    if out_dir:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{rec['mesh']}".replace("/", "-")
+        (out_dir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--remat")  # none | dots | full | group:<k>
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--seq-attn-min", type=int, default=16384)
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape (or --all) required")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = 0
+    for mp in meshes:
+        for arch, shp in cells:
+            try:
+                run_cell(arch, shp, multi_pod=mp, remat=args.remat,
+                         microbatches=args.microbatches,
+                         fsdp=not args.no_fsdp,
+                         seq_shard=not args.no_seq_shard,
+                         seq_attn_min_s=args.seq_attn_min,
+                         out_dir=out_dir)
+            except Exception:
+                failures += 1
+                print(f"[FAIL] {arch} x {shp} multi_pod={mp}")
+                traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

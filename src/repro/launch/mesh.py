@@ -1,0 +1,38 @@
+"""Production mesh factory.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state. The dry-run entry point sets
+``--xla_force_host_platform_device_count=512`` *before* importing jax; real
+TPU launches get the same shapes from the actual pod slice.
+
+Mesh axes:
+  pod   — across-pod data parallelism (DCN in practice; 2 pods here)
+  data  — within-pod data parallelism + FSDP shard axis (16-way)
+  model — tensor/expert/sequence parallelism (16-way)
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devices)}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax (dryrun.py does this)")
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_host_mesh():
+    """1-device mesh for smoke tests: same axis names, trivial sizes."""
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                             ("data", "model"))

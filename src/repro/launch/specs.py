@@ -1,0 +1,88 @@
+"""ShapeDtypeStruct stand-ins for every dry-run cell — no device allocation.
+
+``input_specs(cfg, shape)`` returns the abstract inputs for the step kind:
+  train   -> (params, opt_state, batch)
+  prefill -> (params, batch)
+  decode  -> (params, cache, token, pos)
+
+Every struct carries its NamedSharding so ``jax.jit(...).lower(...)`` sees
+the full distribution plan.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig, ShapeSpec
+from repro.models.schema import abstract_params
+from repro.optim.adamw import AdamWState
+from repro.sharding.rules import (ShardingRules, cache_shardings,
+                                  input_shardings, opt_state_shardings,
+                                  param_shardings)
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _with_shardings(tree, shardings):
+    return jax.tree.map(
+        lambda s, sh: _sds(s.shape, s.dtype, sh), tree, shardings)
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract train/prefill batch (tokens or frontend embeds)."""
+    b, s = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    if cfg.frontend:
+        batch["embeds"] = _sds((b, s, cfg.d_frontend), jnp.bfloat16)
+        batch["labels"] = _sds((b, s), jnp.int32)
+        if cfg.mrope:
+            batch["positions"] = _sds((3, b, s), jnp.int32)
+    else:
+        batch["tokens"] = _sds((b, s), jnp.int32)
+        if shape.kind == "train":
+            # labels provided explicitly (shifted by the data pipeline) so
+            # the model sees the full power-of-two seq_len — an off-by-one
+            # S-1 breaks sequence sharding (4095 % 16 != 0) and pads every
+            # attention chunk scan.
+            batch["labels"] = _sds((b, s), jnp.int32)
+    return batch
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeSpec):
+    """Abstract decode cache with capacity seq_len."""
+    def ab(x):
+        return _sds(x.shape, x.dtype)
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+    return jax.tree.map(ab, cache)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, rules: ShardingRules
+                ) -> Tuple[Any, ...]:
+    params = _with_shardings(abstract_params(cfg), param_shardings(rules, cfg))
+    if shape.kind == "train":
+        batch = abstract_batch(cfg, shape)
+        batch = _with_shardings(batch, input_shardings(rules, batch))
+        opt = AdamWState(
+            m=abstract_params(cfg), v=abstract_params(cfg),
+            step=_sds((), jnp.int32))
+        opt = _with_shardings(opt, opt_state_shardings(rules, cfg))
+        return params, opt, batch
+    if shape.kind == "prefill":
+        batch = abstract_batch(cfg, shape)
+        batch = _with_shardings(batch, input_shardings(rules, batch))
+        return params, batch
+    if shape.kind == "decode":
+        cache = abstract_cache(cfg, shape)
+        cache = _with_shardings(cache, cache_shardings(rules, cache))
+        token = _sds((shape.global_batch, 1), jnp.int32,
+                     rules.named(rules.activation_spec(
+                         "tokens", (shape.global_batch, 1))))
+        pos = _sds((), jnp.int32, rules.named(jax.sharding.PartitionSpec()))
+        return params, cache, token, pos
+    raise ValueError(shape.kind)

@@ -1,0 +1,287 @@
+"""Recurrent mixers: xLSTM (mLSTM, sLSTM) and Griffin's RG-LRU.
+
+Training paths:
+  * mLSTM — chunkwise-parallel form (lax.scan over chunks; quadratic inside a
+    chunk, matrix-memory state across chunks) with log-space stabilizers,
+    following the xLSTM formulation.
+  * sLSTM — strictly sequential (recurrent h_{t-1} -> gates), lax.scan over
+    time; this non-parallelizable form is intrinsic to sLSTM.
+  * RG-LRU — diagonal linear recurrence via associative scan (or the Pallas
+    blocked kernel on TPU).
+
+Decode paths are single-step state updates; states live in the layer cache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_norm, cdt, linear, rms_head_norm
+from repro.sharding import shard_hint
+
+LOG_EPS = -30.0
+C_LRU = 8.0
+
+
+# ---------------------------------------------------------------------------
+# causal conv1d (width-4) with decode state
+# ---------------------------------------------------------------------------
+
+class ConvState(NamedTuple):
+    buf: jax.Array                      # (B, W-1, D) trailing inputs
+
+
+def causal_conv(p, x, state: ConvState | None):
+    """Depthwise causal conv. x: (B,S,D). Returns (y, new_state)."""
+    w, b = p["w"], p["b"]                                     # (W, D), (D,)
+    width = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.buf.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+            for i in range(width))
+    y = y + b.astype(x.dtype)
+    new_state = ConvState(xp[:, -(width - 1):, :].astype(jnp.float32))
+    return y, new_state
+
+
+def conv_state_init(b, d):
+    return ConvState(jnp.zeros((b, 3, d), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    c: jax.Array                        # (B, H, hd, hd) matrix memory (m-scaled)
+    n: jax.Array                        # (B, H, hd)
+    m: jax.Array                        # (B, H) log-space stabilizer
+    conv: ConvState
+
+
+def mlstm_state_init(b, h, hd, de):
+    return MLSTMState(jnp.zeros((b, h, hd, hd), jnp.float32),
+                      jnp.zeros((b, h, hd), jnp.float32),
+                      jnp.full((b, h), LOG_EPS, jnp.float32),
+                      conv_state_init(b, de))
+
+
+def _mlstm_chunk(carry, inp):
+    """One chunk of the chunkwise-parallel stabilized mLSTM.
+
+    carry: (C, n, m) with C (B,H,hd,hd); inp: q,k,v (B,c,H,hd) with k
+    pre-scaled by hd^-0.5, logi/logf (B,c,H). All f32.
+    """
+    C_p, n_p, m_p = carry
+    q, k, v, logi, logf = inp
+    c = q.shape[1]
+    F = jnp.cumsum(logf, axis=1)                               # (B,c,H) inclusive
+    Ftot = F[:, -1]                                            # (B,H)
+    G = jax.lax.cummax(logi - F, axis=1)                       # (B,c,H)
+    m_t = F + jnp.maximum(m_p[:, None], G)                     # (B,c,H)
+
+    # decay matrix D[t,s] = exp(F_t - F_s + logi_s - m_t), s <= t
+    logD = (F[:, :, None] - F[:, None, :] + logi[:, None, :]
+            - m_t[:, :, None])                                 # (B,t,s,H)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    D = jnp.where(tri[None, :, :, None], jnp.exp(logD), 0.0)
+
+    S_qk = jnp.einsum("bthd,bshd->btsh", q, k)                 # (B,t,s,H)
+    intra = jnp.einsum("btsh,bshd->bthd", S_qk * D, v)
+    w_inter = jnp.exp(F + m_p[:, None] - m_t)                  # (B,c,H)
+    inter = jnp.einsum("bthd,bhde->bthe", q, C_p) * w_inter[..., None]
+    n_t = (w_inter[..., None] * n_p[:, None]
+           + jnp.einsum("btsh,bshd->bthd", D, k))
+    qn = jnp.abs(jnp.einsum("bthd,bthd->bth", q, n_t))
+    denom = jnp.maximum(qn, jnp.exp(-m_t))
+    h = (intra + inter) / denom[..., None]                     # (B,c,H,hd)
+
+    # chunk-end state
+    m_new = m_t[:, -1]                                         # (B,H)
+    w_c = jnp.exp(Ftot[:, None] - F + logi - m_new[:, None])   # (B,s,H)
+    C_new = (jnp.exp(Ftot + m_p - m_new)[..., None, None] * C_p
+             + jnp.einsum("bsh,bshd,bshe->bhde", w_c, k, v))
+    n_new = (jnp.exp(Ftot + m_p - m_new)[..., None] * n_p
+             + jnp.einsum("bsh,bshd->bhd", w_c, k))
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_scan(q, k, v, logi, logf, state: MLSTMState, chunk: int):
+    """q,k,v: (B,S,H,hd) f32; logi/logf: (B,S,H) f32. Returns (h, new_state).
+
+    S is padded to a chunk multiple with i-gate = -inf (no state contribution)
+    and f-gate = 1 (state preserved); padded outputs are sliced off."""
+    b, s, h, hd = q.shape
+    ck = min(chunk, s)
+    pad = (-s) % ck
+    if pad:
+        padq = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(x, padq) for x in (q, k, v))
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)),
+                       constant_values=2 * LOG_EPS)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    n = sp // ck
+    shp = lambda x: jnp.moveaxis(x.reshape(b, n, ck, *x.shape[2:]), 1, 0)
+    carry = (state.c, state.n, state.m)
+    # checkpointed per chunk: the backward otherwise stacks every chunk's
+    # (c,c) decay/score matrices (measured 29 GiB on xlstm train_4k)
+    (c_f, n_f, m_f), hs = jax.lax.scan(
+        jax.checkpoint(_mlstm_chunk,
+                       policy=jax.checkpoint_policies.nothing_saveable),
+        carry, (shp(q), shp(k), shp(v), shp(logi), shp(logf)))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, sp, h, hd)[:, :s]
+    return hs, (c_f, n_f, m_f)
+
+
+def mlstm_block(p, x, cfg: ModelConfig, state: MLSTMState | None):
+    """Full mLSTM block. x: (B,S,d). Returns (out, new_state)."""
+    b, s, d = x.shape
+    de = 2 * d
+    h = cfg.n_heads
+    hd = de // h
+    hx = apply_norm(p["norm"], x, cfg)
+    u, g = jnp.split(linear(p["wup"], hx, cfg), 2, axis=-1)    # (B,S,de) x2
+    u, conv_state = causal_conv(p["conv"], u,
+                                state.conv if state is not None else None)
+    u = jax.nn.silu(u)
+    q = linear(p["wq"], u, cfg).reshape(b, s, h, hd).astype(jnp.float32)
+    k = linear(p["wk"], u, cfg).reshape(b, s, h, hd).astype(jnp.float32)
+    v = linear(p["wv"], u, cfg).reshape(b, s, h, hd).astype(jnp.float32)
+    k = k * hd ** -0.5
+    gates = linear(p["wif"], u, cfg).astype(jnp.float32)       # (B,S,2H)
+    logi, f_pre = gates[..., :h], gates[..., h:]
+    logf = -jax.nn.softplus(-f_pre)                            # log sigmoid
+
+    st = state if state is not None else mlstm_state_init(b, h, hd, de)
+    hs, (c_f, n_f, m_f) = mlstm_scan(q, k, v, logi, logf, st, cfg.mlstm_chunk)
+    hs = rms_head_norm(p["onorm"]["scale"].reshape(h, hd), hs.astype(cdt(cfg)))
+    out = hs.reshape(b, s, de) * jax.nn.silu(g)
+    out = linear(p["wdown"], out, cfg)
+    return out, MLSTMState(c_f, n_f, m_f, conv_state)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    c: jax.Array                        # (B, d)
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array
+
+
+def slstm_state_init(b, d):
+    z = jnp.zeros((b, d), jnp.float32)
+    return SLSTMState(z, z, z, jnp.full((b, d), LOG_EPS, jnp.float32))
+
+
+def slstm_block(p, x, cfg: ModelConfig, state: SLSTMState | None):
+    """Sequential sLSTM with per-head block-diagonal recurrence."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, d // cfg.n_heads
+    hx = apply_norm(p["norm"], x, cfg)
+    gx = (linear(p["wg"], hx, cfg) + p["bg"].astype(cdt(cfg))).astype(jnp.float32)
+    st = state if state is not None else slstm_state_init(b, d)
+    rg = p["rg"].astype(jnp.float32)                           # (H, hd, 4hd)
+
+    def step(carry, g_t):
+        c, n, hprev, m = carry                                 # (B,d) each
+        hh = hprev.reshape(b, h, hd)
+        rec = jnp.einsum("bhd,hde->bhe", hh, rg).reshape(b, 4 * d)
+        g = g_t + rec
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        m_new = jnp.maximum(gf + m, gi)                        # exp f-gate form
+        ip = jnp.exp(gi - m_new)
+        fp = jnp.exp(gf + m - m_new)
+        c_new = fp * c + ip * jnp.tanh(gz)
+        n_new = fp * n + ip
+        h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    gx_t = jnp.moveaxis(gx, 1, 0)                              # (S,B,4d)
+    # two-level sqrt(T) checkpointing: a flat T-step scan saves 4 state
+    # vectors per step for the backward (4 GiB/layer at 4k x B16); the
+    # outer scan saves states every `blk` steps and recomputes inside.
+    blk = max(1, int(s ** 0.5))
+    nb, rem = divmod(s, blk)
+    if rem:
+        nb += 1
+        gx_t = jnp.pad(gx_t, ((0, nb * blk - s), (0, 0), (0, 0)))
+
+    def block(carry, g_blk):
+        return jax.lax.scan(step, carry, g_blk)
+
+    (c_f, n_f, h_f, m_f), hs = jax.lax.scan(
+        jax.checkpoint(block,
+                       policy=jax.checkpoint_policies.nothing_saveable),
+        (st.c, st.n, st.h, st.m),
+        gx_t.reshape(nb, blk, b, 4 * d))
+    hs = hs.reshape(nb * blk, b, d)[:s]
+    hs = jnp.moveaxis(hs, 0, 1).astype(cdt(cfg))               # (B,S,d)
+    out = linear(p["wo"], hs, cfg)
+    return out, SLSTMState(c_f, n_f, h_f, m_f)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+class RGLRUState(NamedTuple):
+    h: jax.Array                        # (B, dr)
+    conv: ConvState
+
+
+def rglru_state_init(b, dr):
+    return RGLRUState(jnp.zeros((b, dr), jnp.float32), conv_state_init(b, dr))
+
+
+def rglru_block(p, x, cfg: ModelConfig, state: RGLRUState | None):
+    b, s, d = x.shape
+    dr = cfg.lru_d
+    hx = apply_norm(p["norm"], x, cfg)
+    xr = linear(p["wx"], hx, cfg)                              # (B,S,dr)
+    xg = linear(p["wg"], hx, cfg)
+    xr, conv_state = causal_conv(p["conv"], xr,
+                                 state.conv if state is not None else None)
+    xr32 = xr.astype(jnp.float32)
+    lru = p["lru"]
+    r = jax.nn.sigmoid(xr32 @ lru["wa"]["w"].astype(jnp.float32)
+                       + lru["ba"].astype(jnp.float32))        # recurrence gate
+    i = jax.nn.sigmoid(xr32 @ lru["wi"]["w"].astype(jnp.float32)
+                       + lru["bi"].astype(jnp.float32))        # input gate
+    log_a = C_LRU * r * jax.nn.log_sigmoid(lru["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)                                         # (B,S,dr) in (0,1)
+    gx = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xr32)
+
+    h0 = (state.h if state is not None else jnp.zeros((b, dr), jnp.float32))
+    if cfg.use_pallas and s > 1:
+        from repro.kernels import ops as kops
+        hs, h_f = kops.rglru_scan(a, gx, h0)
+    else:
+        hs, h_f = linear_scan(a, gx, h0)
+    hs = shard_hint(hs, "acts_ffn")
+    out = hs.astype(cdt(cfg)) * jax.nn.gelu(xg)
+    out = linear(p["wo"], out, cfg)
+    return out, RGLRUState(h_f, conv_state)
+
+
+def linear_scan(a, b_in, h0):
+    """h_t = a_t * h_{t-1} + b_t via associative scan. a,b: (B,S,D), h0: (B,D).
+    Returns (h (B,S,D), h_final (B,D))."""
+    # fold h0 into the first element: b_1' = a_1 * h0 + b_1
+    b0 = b_in.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b0), axis=1)
+    return hh, hh[:, -1, :]

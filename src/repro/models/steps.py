@@ -1,0 +1,86 @@
+"""Step factories: the functions the launcher / dry-run actually lowers.
+
+``make_train_step(cfg, hp, microbatches)`` returns
+``train_step(params, opt_state, batch) -> (params, opt_state, metrics)``.
+Microbatching (gradient accumulation) scans over batch slices so XLA can
+overlap each microbatch's reduce-scatter with the next one's compute —
+the paper's "on-demand pipeline insertion" adapted to collectives.
+
+``make_prefill_step`` / ``make_decode_step`` are the serving entry points.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss(params, batch):
+        return M.loss_fn(params, cfg, batch)
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, hp: adamw.AdamWConfig,
+                    microbatches: int = 1):
+    loss_fn = make_loss_fn(cfg)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def slice_mb(i, key, x):
+                # positions for M-RoPE are (3, B, S): batch is axis 1
+                ax = 1 if (key == "positions" and x.ndim == 3
+                           and x.shape[0] == 3) else 0
+                mb = x.shape[ax] // microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=ax)
+
+            def mb_body(carry, i):
+                acc, ls = carry
+                mbatch = {k: slice_mb(i, k, v) for k, v in batch.items()}
+                l, g = grads_of(params, mbatch)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, ls + l), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                mb_body, (zero, jnp.zeros((), jnp.float32)),
+                jnp.arange(microbatches))
+            loss = lsum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+        else:
+            loss, grads = grads_of(params, batch)
+
+        params, opt_state, metrics = adamw.update(grads, opt_state, params, hp)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return M.prefill(params, cfg, tokens=batch.get("tokens"),
+                         embeds=batch.get("embeds"),
+                         positions=batch.get("positions"))
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, token, pos):
+        return M.decode_step(params, cfg, cache, token, pos)
+    return decode_step
+
+
+def make_encode_step(cfg: ModelConfig):
+    def encode_step(params, batch):
+        return M.encode(params, cfg, embeds=batch["embeds"])
+    return encode_step

@@ -1,0 +1,57 @@
+"""Int8 gradient compression with error feedback.
+
+For cross-pod (DCN) gradient reduction, 4x fewer bytes on the wire directly
+scales the collective roofline term down. Per-tensor symmetric int8
+quantization; the quantization error is carried in an accumulator and added
+back next step (error feedback keeps SGD/Adam convergence — Karimireddy et
+al. 2019). The wire format (int8 payload + f32 scale) is what a production
+all-reduce would ship; here compress/decompress wraps the grads around the
+all-reduce that jit inserts.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressState(NamedTuple):
+    error: dict           # residual per param, same structure/dtype f32
+
+
+def init(params) -> CompressState:
+    return CompressState(jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _quantize(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, state: CompressState
+                   ) -> Tuple[dict, CompressState, dict]:
+    """Returns (decompressed grads as the optimizer sees them, new error
+    state, wire stats). grads/state leaves must align."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        q, scale = _quantize(g)
+        deq = _dequantize(q, scale)
+        return deq, g - deq, q.size  # int8 bytes on the wire
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(state.error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    deq = treedef.unflatten([o[0] for o in outs])
+    err = treedef.unflatten([o[1] for o in outs])
+    wire_bytes = sum(o[2] for o in outs)           # int8: 1 byte/elem
+    raw_bytes = sum(g.size * 4 for g in flat_g)
+    return deq, CompressState(err), {
+        "wire_bytes": wire_bytes, "raw_bytes": raw_bytes,
+        "ratio": raw_bytes / max(wire_bytes, 1)}

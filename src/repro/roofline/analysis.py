@@ -1,0 +1,177 @@
+"""Three-term roofline from a compiled SPMD executable.
+
+    compute_s    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory_s     = HLO_bytes_per_device / HBM_BW
+    collective_s = ring-model ICI bytes per device / ICI_BW
+
+``cost_analysis()`` FLOPs/bytes are per-device post-partitioning (verified
+against analytic counts). Collective bytes are parsed from the
+post-optimization HLO text: for each all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute we take the *result* buffer
+bytes per device and apply the standard ring cost along its replica group
+(all-reduce 2(n-1)/n on the full value, all-gather (n-1)/n of the gathered
+value, reduce-scatter (n-1)/n of the reduced value, all-to-all (n-1)/n,
+permute 1x). TPU v5e constants; override for other targets.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter
+from typing import Dict, Optional
+
+# --- TPU v5e (per chip) -----------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (assume 1 active link direction)
+HBM_PER_CHIP = 16 * 1024**3  # 16 GiB
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\])\S*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # permutes etc.: conservative
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ring_bytes: float = 0.0            # per-device ICI bytes (ring model)
+    raw_bytes: float = 0.0             # sum of result buffer bytes
+    counts: Counter = dataclasses.field(default_factory=Counter)
+    by_kind_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_txt, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":               # counted at -start
+            continue
+        n = _group_size(line)
+        if n <= 1:
+            continue
+        b = _shape_bytes(shape_txt)
+        if kind == "all-reduce":
+            ring = 2.0 * (n - 1) / n * b
+        elif kind in ("all-gather", "all-to-all"):
+            ring = (n - 1) / n * b         # result = full value
+        elif kind == "reduce-scatter":
+            ring = (n - 1) * b             # result = 1/n of reduced value
+        else:                              # collective-permute
+            ring = float(b)
+        st.ring_bytes += ring
+        st.raw_bytes += b
+        st.counts[kind] += 1
+        st.by_kind_bytes[kind] = st.by_kind_bytes.get(kind, 0.0) + ring
+    return st
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                        # per device
+    bytes_hbm: float                    # per device
+    collectives: CollectiveStats
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bound: str
+    arg_bytes: int = 0
+    out_bytes: int = 0
+    temp_bytes: int = 0
+    model_flops: float = 0.0            # 6*N*D style, per device
+    useful_ratio: float = 0.0           # model_flops / hlo flops
+    raw_flops: float = 0.0              # builtin cost_analysis (scan-undercounted)
+    raw_bytes: float = 0.0
+
+    def asdict(self):
+        d = dataclasses.asdict(self)
+        d["collectives"] = {
+            "ring_bytes": self.collectives.ring_bytes,
+            "raw_bytes": self.collectives.raw_bytes,
+            "counts": dict(self.collectives.counts),
+            "by_kind_bytes": self.collectives.by_kind_bytes,
+        }
+        return d
+
+
+def analyze(compiled, *, model_flops_total: float = 0.0,
+            n_devices: int = 1) -> Roofline:
+    """Trip-count-aware roofline. ``cost_analysis()`` counts while bodies
+    once (scan under-reporting), so FLOPs/bytes/collectives come from the
+    HLO-text walker in ``hlo_parse``; the builtin numbers are kept in
+    ``raw_*`` fields for comparison."""
+    from repro.roofline.hlo_parse import HloCost
+    text = compiled.as_text()
+    cost = HloCost(text).entry_cost()
+    flops, bts = cost.flops, cost.bytes
+    coll = CollectiveStats(
+        ring_bytes=cost.coll_ring, raw_bytes=cost.coll_ring,
+        counts=cost.coll_counts, by_kind_bytes=cost.coll_bytes_by_kind)
+    ca = compiled.cost_analysis() or {}
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bts / HBM_BW
+    coll_s = coll.ring_bytes / ICI_BW
+    bound = max((("compute", compute_s), ("memory", memory_s),
+                 ("collective", coll_s)), key=lambda kv: kv[1])[0]
+    ma = compiled.memory_analysis()
+    mf_dev = model_flops_total / max(n_devices, 1)
+    return Roofline(
+        flops=flops, bytes_hbm=bts, collectives=coll,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        bound=bound,
+        arg_bytes=getattr(ma, "argument_size_in_bytes", 0),
+        out_bytes=getattr(ma, "output_size_in_bytes", 0),
+        temp_bytes=getattr(ma, "temp_size_in_bytes", 0),
+        model_flops=mf_dev,
+        useful_ratio=(mf_dev / flops) if flops else 0.0,
+        raw_flops=float(ca.get("flops", 0.0)),
+        raw_bytes=float(ca.get("bytes accessed", 0.0)),
+    )
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """Total step MODEL_FLOPS: 6*N_active*D for train, 2*N_active*B for
+    decode (one token/seq), 2*N_active*D for prefill."""
+    n_act = cfg.n_active_params()
+    if shape.kind == "train":
+        d_tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * d_tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.global_batch * shape.seq_len
+    return 2.0 * n_act * shape.global_batch          # decode: one token each

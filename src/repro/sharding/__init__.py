@@ -1,0 +1,2 @@
+from repro.sharding.ctx import current_rules, set_rules, shard_hint  # noqa: F401
+from repro.sharding.rules import ShardingRules, make_rules, param_shardings, input_shardings  # noqa: F401

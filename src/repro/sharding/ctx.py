@@ -1,0 +1,42 @@
+"""Ambient sharding context.
+
+Model code calls ``shard_hint(x, kind)`` at layout-critical points; what that
+means is decided by the active :class:`ShardingRules` (set by the launcher /
+dry-run / MeshPlanner). With no rules set (unit tests, single device) hints
+are no-ops, so model code never depends on a mesh being present.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_state = threading.local()
+
+
+def current_rules():
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def set_rules(rules):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def shard_hint(x, kind: str):
+    """Apply a with_sharding_constraint for activation ``kind`` if rules are
+    active and the constraint divides evenly; otherwise identity."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.activation_spec(kind, x.shape)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(rules.mesh, spec))

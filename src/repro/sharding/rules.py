@@ -1,0 +1,199 @@
+"""Logical-axis -> mesh-axis rule engine.
+
+Every parameter carries logical axis names from the schema; every activation
+hint (`shard_hint`) names a layout point. Rules resolve both to
+PartitionSpecs with *divisibility checks*: a mapping that does not divide
+evenly falls back down a candidate list (ending in replication), so every
+arch lowers on every mesh — head counts of 40/20/15/10 on a 16-way axis
+simply fall back rather than failing, which GSPMD would reject.
+
+The MeshPlanner mutates a :class:`ShardingRules` (its DSE knobs) and
+re-lowers; this module is deliberately data-driven for that reason.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# candidate mesh axes per logical axis, in preference order. Each entry is a
+# tuple of mesh-axis names to use jointly (e.g. FSDP over ("pod","data")).
+DEFAULT_PARAM_RULES: Dict[str, Tuple[Tuple[str, ...], ...]] = {
+    "vocab":   (("model",),),
+    "ffn":     (("model",),),
+    "qkv":     (("model",),),
+    "kv":      (("model",),),
+    "experts": (("model",),),
+    "embed":   (),                       # replicated unless fsdp=True
+}
+FSDP_EMBED = (("pod", "data"), ("data",))
+
+
+@dataclass
+class ShardingRules:
+    mesh: jax.sharding.Mesh
+    # mesh axis names present (subset of pod/data/model)
+    dp_axes: Tuple[str, ...] = ("pod", "data")
+    tp_axis: str = "model"
+    fsdp: bool = True                    # shard "embed" dims over dp axes
+    seq_shard: bool = True               # sequence parallelism for activations
+    seq_attn_min_s: int = 16384          # min S for seq-parallel attention
+    param_rules: Dict[str, Tuple[Tuple[str, ...], ...]] = field(
+        default_factory=lambda: dict(DEFAULT_PARAM_RULES))
+
+    def __post_init__(self):
+        names = self.mesh.axis_names
+        self.dp_axes = tuple(a for a in self.dp_axes if a in names)
+        self._sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    # -- helpers ------------------------------------------------------------
+    def axes_size(self, axes: Sequence[str]) -> int:
+        return int(np.prod([self._sizes[a] for a in axes])) if axes else 1
+
+    def _fits(self, dim: int, axes: Sequence[str], used: set) -> bool:
+        return (axes and not (set(axes) & used)
+                and all(a in self._sizes for a in axes)
+                and dim % self.axes_size(axes) == 0)
+
+    # -- params -------------------------------------------------------------
+    def param_spec(self, shape: Tuple[int, ...], logical: Tuple[object, ...]) -> P:
+        used: set = set()
+        out = []
+        for dim, name in zip(shape, logical):
+            cands: Tuple[Tuple[str, ...], ...] = ()
+            if name is not None:
+                cands = tuple(self.param_rules.get(name, ()))
+                if name == "embed" and self.fsdp:
+                    cands = cands + FSDP_EMBED
+            chosen = None
+            for axes in cands:
+                if self._fits(dim, axes, used):
+                    chosen = axes
+                    break
+            if chosen:
+                used.update(chosen)
+                out.append(chosen if len(chosen) > 1 else chosen[0])
+            else:
+                out.append(None)
+        return P(*out)
+
+    # -- activations ----------------------------------------------------------
+    def activation_spec(self, kind: str, shape: Tuple[int, ...]) -> Optional[P]:
+        """PartitionSpec for an activation hint, or None (no constraint)."""
+        dp = tuple(a for a in self.dp_axes)
+        dp_n = self.axes_size(dp)
+        tp_n = self._sizes.get(self.tp_axis, 1)
+
+        def dp_if(b):
+            return (dp if len(dp) > 1 else dp[0]) if (dp and b % dp_n == 0 and b >= dp_n) else None
+
+        if kind == "acts":               # (B, S, D)
+            b, s, d = shape
+            sp = self.tp_axis if (self.seq_shard and s % tp_n == 0 and s >= tp_n) else None
+            return P(dp_if(b), sp, None)
+        if kind == "acts_ffn":           # (B, S, Dff) - recurrent widths
+            b, s, d = shape
+            tp = self.tp_axis if d % tp_n == 0 else None
+            return P(dp_if(b), None, tp)
+        if kind == "logits":             # (B, S, V) or (B, V)
+            v = shape[-1]
+            tp = self.tp_axis if v % tp_n == 0 else None
+            return P(dp_if(shape[0]), *([None] * (len(shape) - 2)), tp)
+        if kind == "heads":              # (B, S, H, hd) pre-attention
+            b, s, h, _ = shape
+            if h % tp_n == 0 and h >= tp_n:
+                return P(dp_if(b), None, self.tp_axis, None)
+            if self.seq_shard and s % tp_n == 0 \
+                    and s >= self.seq_attn_min_s:
+                # head count below/indivisible by the axis (40, 15, 10):
+                # sequence-parallel attention at long context only — it
+                # divides peak memory ~tp_n x (llama4 prefill 18 -> 5.7
+                # GiB) but adds bwd gathers that regress short-seq
+                # training (smollm collective 1.7 -> 16.2 s; refuted
+                # there, see EXPERIMENTS.md §Perf)
+                return P(dp_if(b), self.tp_axis, None, None)
+            return P(dp_if(b), None, None, None)
+        if kind == "expert_buf":         # (E, C, D)
+            e = shape[0]
+            tp = self.tp_axis if e % tp_n == 0 else None
+            return P(tp, None, None)
+        if kind == "expert_buf4":        # (B, E, C, D) grouped dispatch
+            b, e = shape[0], shape[1]
+            tp = self.tp_axis if e % tp_n == 0 else None
+            return P(dp_if(b), tp, None, None)
+        if kind == "kv_cache":           # (B, S, Hkv, hd)
+            b, s, h, _hd = shape
+            if h % tp_n == 0:            # prefer head sharding (local attn math)
+                return P(dp_if(b), None, self.tp_axis, None)
+            if s % tp_n == 0 and s >= tp_n:
+                # GQA head counts below the axis size: shard the sequence
+                # dim (attention reduces over S; XLA inserts the partial-
+                # softmax collectives). head_dim-sharding was tried and
+                # REFUTED: 20x collective regression on granite decode
+                # with no temp win on qwen1.5-4b (EXPERIMENTS.md §Perf).
+                return P(dp_if(b), self.tp_axis, None, None)
+            return P(dp_if(b), None, None, None)
+        if kind == "tokens":             # (B, S)
+            return P(dp_if(shape[0]), None)
+        return None
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def make_rules(mesh, **kw) -> ShardingRules:
+    return ShardingRules(mesh=mesh, **kw)
+
+
+# ---------------------------------------------------------------------------
+# trees of shardings for params / optimizer / inputs
+# ---------------------------------------------------------------------------
+
+def param_shardings(rules: ShardingRules, cfg: ModelConfig):
+    """Tree of NamedShardings matching ``schema.abstract_params``."""
+    from repro.models.schema import schema, tree_map_schema
+    return tree_map_schema(
+        lambda s: rules.named(rules.param_spec(s.shape, s.axes)), schema(cfg))
+
+
+def opt_state_shardings(rules: ShardingRules, cfg: ModelConfig):
+    from repro.optim.adamw import AdamWState
+    ps = param_shardings(rules, cfg)
+    scalar = rules.named(P())
+    return AdamWState(m=ps, v=ps, step=scalar)
+
+
+def input_shardings(rules: ShardingRules, batch_tree):
+    """Shard batch inputs: leading dim over dp when divisible (tokens,
+    embeds, labels); positions replicated."""
+    def spec(path_leaf):
+        arr = path_leaf
+        b = arr.shape[0]
+        dp = tuple(rules.dp_axes)
+        dp_n = rules.axes_size(dp)
+        lead = (dp if len(dp) > 1 else dp[0]) if (dp and b % dp_n == 0 and b >= dp_n) else None
+        return rules.named(P(lead, *([None] * (arr.ndim - 1))))
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_shardings(rules: ShardingRules, cache_tree):
+    """Shard decode caches: batch over dp, kv-heads over model if divisible."""
+    def spec(arr):
+        if arr.ndim >= 5:                # stacked KV: (reps, B, S, Hkv, hd)
+            _, b, s, h, _ = arr.shape[:5]
+            sp = rules.activation_spec("kv_cache", (b, s, h, arr.shape[4]))
+            return rules.named(P(None, *sp))
+        if arr.ndim >= 2:                # recurrent states: (reps, B, ...)
+            b = arr.shape[1]
+            dp = tuple(rules.dp_axes)
+            dp_n = rules.axes_size(dp)
+            lead = (dp if len(dp) > 1 else dp[0]) if (dp and b % dp_n == 0 and b >= dp_n) else None
+            return rules.named(P(None, lead, *([None] * (arr.ndim - 2))))
+        return rules.named(P(*([None] * arr.ndim)))
+    return jax.tree.map(spec, cache_tree)

@@ -1,0 +1,95 @@
+"""GPUPlanner + PPA model: the paper's 12 versions, map behaviour, and
+hypothesis properties of the memory-division strategy."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.planner import enumerate_versions, plan
+from repro.core.ppa import PAPER_TABLE1, GGPUVersion, baseline_inventory
+from repro.core.sram import Macro, divided_path_delay
+
+
+def test_baseline_is_500mhz_no_divisions():
+    """The 'standard version without optimizations' runs at ~500 MHz."""
+    v = GGPUVersion(1, 500.0, baseline_inventory())
+    assert 490 <= v.fmax_mhz() <= 530
+    assert all(m.divided == 0 for m in v.inventory)
+
+
+@pytest.mark.parametrize("n_cus", [1, 2, 4])
+def test_667_closes_below_8cus(n_cus):
+    p = plan(n_cus, 667.0)
+    assert p.achieved, p.reason
+
+
+def test_8cu_667_interconnect_bound():
+    """The paper's headline physical-design finding: 8CU@667 only reaches
+    ~600 MHz, and pipelining cannot fix it."""
+    p = plan(8, 667.0)
+    assert not p.achieved
+    assert "interconnect" in p.reason
+    assert 580 <= p.version.fmax_mhz() <= 620
+    assert p.map_log[-1].bottleneck == "interconnect"
+
+
+def test_map_divides_then_pipelines():
+    """The map's action sequence mirrors the paper: memory divisions with
+    on-demand pipeline insertion when the critical path moves to logic."""
+    p = plan(1, 667.0)
+    assert p.achieved
+    actions = [e.action for e in p.map_log]
+    assert any(a.startswith("divide") for a in actions)
+    assert any("pipeline" in a for a in actions)
+
+
+def test_twelve_versions_ppa_error():
+    """Mean relative error vs Table I (area, #mem, power) under 25%."""
+    errs = []
+    plans = enumerate_versions()
+    assert len(plans) == 12
+    freqs = [500, 500, 500, 500, 590, 590, 590, 590, 667, 667, 667, 667]
+    for p, f in zip(plans, freqs):
+        r = p.version.report()
+        pap = PAPER_TABLE1[(r["n_cus"], f)]
+        errs += [abs(r["total_area_mm2"] - pap["area"]) / pap["area"],
+                 abs(r["total_w"] - pap["total"]) / pap["total"]]
+    assert sum(errs) / len(errs) < 0.25
+
+
+def test_area_grows_linearly_with_cus():
+    areas = [plan(c, 500.0).version.total_area_mm2() for c in (1, 2, 4, 8)]
+    # paper: "the G-GPU size grows linearly with the number of CUs"
+    slope1 = (areas[1] - areas[0])
+    slope3 = (areas[3] - areas[2]) / 4
+    assert abs(slope1 - slope3) / slope1 < 0.1
+
+
+@given(st.integers(5, 14), st.integers(2, 7))
+@settings(max_examples=25, deadline=None)
+def test_division_property(words_log2, bits_log2):
+    """Dividing a macro never increases its access delay and always
+    increases its area (the paper's core trade-off)."""
+    m = Macro("m", 2 ** words_log2, 2 ** bits_log2)
+    d = m.divide_words()
+    assert divided_path_delay(d) <= divided_path_delay(m) + 1e-9
+    assert d.area_mm2() > m.area_mm2()
+    assert d.count == 2 * m.count
+
+
+@given(st.integers(1, 8), st.sampled_from([400.0, 500.0, 590.0, 667.0]))
+@settings(max_examples=20, deadline=None)
+def test_plan_postconditions(n_cus, freq):
+    """Achieved plans meet their target; failed plans explain themselves."""
+    p = plan(n_cus, freq)
+    if p.achieved:
+        assert p.version.fmax_mhz() >= freq - 1
+    else:
+        assert p.reason
+        assert p.map_log[-1].action.startswith("STOP")
+
+
+def test_division_limit_stops():
+    """A absurd target fails gracefully at the division/pipeline limits."""
+    p = plan(1, 2000.0)
+    assert not p.achieved

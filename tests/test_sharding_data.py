@@ -1,0 +1,222 @@
+"""Sharding rules (divisibility invariants), MeshPlanner, data pipeline
+determinism, checkpoint roundtrip + resharding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.core.meshplanner import Knobs, estimate, plan
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.config import SHAPES
+from repro.models.schema import abstract_params, init_params, param_axes
+from repro.optim import adamw
+from repro.train import checkpoint
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+class FakeRules:
+    """Divisibility-check logic without a real 256-device mesh."""
+
+    def __init__(self, sizes):
+        from repro.sharding.rules import ShardingRules
+        self._sizes = sizes
+        self.dp_axes = tuple(a for a in ("pod", "data") if a in sizes)
+        self.tp_axis = "model"
+        self.fsdp = True
+        self.seq_shard = True
+        self.param_rules = dict(
+            __import__("repro.sharding.rules", fromlist=["DEFAULT_PARAM_RULES"]
+                       ).DEFAULT_PARAM_RULES)
+        self.axes_size = ShardingRules.axes_size.__get__(self)
+        self._fits = ShardingRules._fits.__get__(self)
+        self.param_spec = ShardingRules.param_spec.__get__(self)
+        self.activation_spec = ShardingRules.activation_spec.__get__(self)
+
+
+RULES = FakeRules({"data": 16, "model": 16})
+
+
+@given(st.integers(1, 2048), st.integers(1, 2048),
+       st.sampled_from(["vocab", "ffn", "qkv", "kv", "embed", "experts"]))
+@settings(max_examples=60, deadline=None)
+def test_param_spec_always_divides(dim0, dim1, ax):
+    """Whatever the shape, the chosen PartitionSpec divides every dim —
+    the invariant that makes every arch lower on every mesh."""
+    spec = RULES.param_spec((dim0, dim1), (ax, "embed"))
+    for dim, s in zip((dim0, dim1), spec):
+        if s is None:
+            continue
+        axes = (s,) if isinstance(s, str) else s
+        n = 1
+        for a in axes:
+            n *= RULES._sizes[a]
+        assert dim % n == 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_axes_match_schema(arch):
+    """Every param has a logical-axes tuple of matching rank."""
+    cfg = get_config(arch)
+    ab = abstract_params(cfg)
+    ax = param_axes(cfg)
+    flat_p = jax.tree.leaves(ab)
+    flat_a = jax.tree.leaves(ax, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(flat_p) == len(flat_a)
+    for p, a in zip(flat_p, flat_a):
+        assert len(p.shape) == len(a), (p.shape, a)
+
+
+def test_activation_spec_fallbacks():
+    # batch 1 cannot shard over dp -> None
+    s = RULES.activation_spec("acts", (1, 4096, 1024))
+    assert s[0] is None
+    # seq not divisible -> no SP
+    s = RULES.activation_spec("acts", (256, 4095, 1024))
+    assert s[1] is None
+    # kv heads below axis size -> sequence-sharded cache
+    s = RULES.activation_spec("kv_cache", (128, 32768, 8, 128))
+    assert s[1] == "model" and s[2] is None
+    # kv heads divisible -> head-sharded cache
+    s = RULES.activation_spec("kv_cache", (128, 32768, 16, 128))
+    assert s[2] == "model"
+
+
+# ---------------------------------------------------------------------------
+# MeshPlanner
+# ---------------------------------------------------------------------------
+
+def test_meshplanner_all_cells_fit_or_explain():
+    for a in ARCH_IDS:
+        for sname, s in SHAPES.items():
+            p = plan(get_config(a), s)
+            assert p.fits or p.reason, (a, sname)
+
+
+def test_meshplanner_memory_actions_monotone():
+    """Each division action reduces estimated activation memory."""
+    cfg = get_config("qwen2-vl-72b")
+    s = SHAPES["train_4k"]
+    base = estimate(cfg, s, Knobs(remat="none", seq_shard=False, fsdp=False))
+    remat = estimate(cfg, s, Knobs(remat="full", seq_shard=False, fsdp=False))
+    sp = estimate(cfg, s, Knobs(remat="full", seq_shard=True, fsdp=False))
+    fsdp = estimate(cfg, s, Knobs(remat="full", seq_shard=True, fsdp=True))
+    assert remat.act_bytes < base.act_bytes
+    assert sp.act_bytes < remat.act_bytes
+    assert fsdp.params_bytes < sp.params_bytes
+    assert fsdp.total_bytes < base.total_bytes
+
+
+def test_meshplanner_flash_kernel_cuts_memory_term():
+    cfg = get_config("granite-8b")
+    s = SHAPES["train_4k"]
+    off = estimate(cfg, s, Knobs(use_flash_kernel=False))
+    on = estimate(cfg, s, Knobs(use_flash_kernel=True))
+    assert on.compute_s < off.compute_s     # no masked-pair waste
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_seekable():
+    dc = DataConfig(vocab_size=1000, seq_len=64, global_batch=8)
+    src = SyntheticLM(dc)
+    b1 = src.batch_at(7)
+    b2 = src.batch_at(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = src.batch_at(8)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # labels are the shifted stream
+    assert b1["tokens"].shape == b1["labels"].shape == (8, 64)
+
+
+def test_data_host_sharding_disjoint():
+    base = DataConfig(vocab_size=1000, seq_len=32, global_batch=8,
+                      host_count=2)
+    h0 = SyntheticLM(DataConfig(**{**base.__dict__, "host_index": 0}))
+    h1 = SyntheticLM(DataConfig(**{**base.__dict__, "host_index": 1}))
+    b0, b1 = h0.batch_at(3), h1.batch_at(3)
+    assert b0["tokens"].shape[0] == 4
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_data_tokens_in_range(step):
+    dc = DataConfig(vocab_size=503, seq_len=16, global_batch=2)
+    b = SyntheticLM(dc).batch_at(step)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 503
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_smoke("granite-8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw.init(params)
+    checkpoint.save(tmp_path, 5, params, opt)
+    assert checkpoint.latest_step(tmp_path) == 5
+    p2, o2, man = checkpoint.restore(
+        tmp_path, 5, abstract_params(cfg),
+        adamw.AdamWState(m=abstract_params(cfg), v=abstract_params(cfg),
+                         step=jax.ShapeDtypeStruct((), jnp.int32)))
+    assert man["step"] == 5
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(o2.step) == 0
+
+
+def test_checkpoint_elastic_restore_single_device(tmp_path):
+    """A checkpoint restores onto a different device layout (here: the
+    trivial 1-device mesh) — the elastic-restart mechanism."""
+    import numpy as _np
+    cfg = get_smoke("smollm-360m")
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    checkpoint.save(tmp_path, 1, params)
+    mesh = jax.sharding.Mesh(
+        _np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    from repro.sharding.rules import make_rules, param_shardings
+    rules = make_rules(mesh)
+    p2, _, _ = checkpoint.restore(tmp_path, 1, abstract_params(cfg),
+                                  shardings=param_shardings(rules, cfg))
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A leftover .tmp dir from a crashed save is never picked up."""
+    cfg = get_smoke("smollm-360m")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    checkpoint.save(tmp_path, 1, params)
+    (tmp_path / "step_00000009.tmp").mkdir()
+    assert checkpoint.latest_step(tmp_path) == 1
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compression_error_feedback():
+    """Error feedback: the accumulated quantization error stays bounded and
+    compressed-grad sums track true-grad sums over steps."""
+    from repro.optim import compress
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(0, 0.01, (64, 64)), jnp.float32)
+    grads = {"w": g_true}
+    st_ = compress.init(grads)
+    total_deq = jnp.zeros_like(g_true)
+    for _ in range(10):
+        deq, st_, stats = compress.compress_grads(grads, st_)
+        total_deq = total_deq + deq["w"]
+    # with error feedback the cumulative compressed signal converges to the
+    # cumulative true signal
+    err = float(jnp.max(jnp.abs(total_deq - 10 * g_true)))
+    assert err < float(jnp.max(jnp.abs(g_true)))
+    assert stats["ratio"] == 4.0
