@@ -5,6 +5,8 @@
   table3_cycles   — Table III: 7 kernels x {RISC-V, 1/2/4/8 CU} cycles
   fig5_speedup    — Fig 5: raw speed-up over RISC-V (input-ratio scaled)
   fig6_area      — Fig 6: speed-up derated by area ratio
+  table_memsys   — beyond the paper: cache-organization DSE on the
+                   cache-thrashing kernel (xcorr), shared vs banked
 
 Each emits ``name,us_per_call,derived`` CSV rows (us_per_call = simulated
 wall-time at the version's achieved frequency where applicable).
@@ -117,6 +119,21 @@ def fig5_speedup(emit):
             emit(f"fig5/{name}/{ncu}cu", row[ncu] / freqs[ncu],
                  f"speedup={su:.1f} wallclock={su_wall:.1f} "
                  f"paper={pap_su:.1f}")
+
+
+def table_memsys(emit, sizes=(64, 1024)):
+    """Cache-organization sweep (the engine's third DSE axis): xcorr —
+    the kernel whose 8-CU regression the paper attributes to shared-cache
+    thrashing — under every registered memory system."""
+    from repro.core.planner import sweep_memsys
+    sweep = sweep_memsys(bench="xcorr", n_cus=(1, 2, 8), sizes=sizes)
+    base = {c: sweep[(c, "shared")]["cycles"]
+            for c in {c for c, _ in sweep}}
+    for (c, ms), info in sweep.items():
+        emit(f"memsys/xcorr/{ms}/{c}cu", info["time_us"],
+             f"cycles={info['cycles']} vs_shared="
+             f"{base[c] / info['cycles']:.2f}x "
+             f"hits={info['hits']} misses={info['misses']}")
 
 
 def fig6_area_derated(emit):

@@ -1,8 +1,10 @@
 """Benchmark harness: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Usage:
-  PYTHONPATH=src python -m benchmarks.run [--fast]
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--engine]
 ``--fast`` skips the O(n^2) cycle simulations (xcorr/parallel_sel).
+``--engine`` runs only the simulator-engine micro-benchmarks (fused
+dispatch, batched launch queue, memory-system DSE sweep).
 """
 from __future__ import annotations
 
@@ -16,6 +18,10 @@ def main() -> None:
         print(f"{name},{us:.3f},{derived}")
 
     print("name,us_per_call,derived")
+    if "--engine" in sys.argv:
+        from benchmarks import engine_bench
+        engine_bench.main(emit)
+        return
     from benchmarks import ggpu_tables, roofline_table
     ggpu_tables.table1_ppa(emit)
     ggpu_tables.table2_wires(emit)
@@ -31,6 +37,8 @@ def main() -> None:
     ggpu_tables.table3_cycles(emit)
     ggpu_tables.fig5_speedup(emit)
     ggpu_tables.fig6_area_derated(emit)
+    # the memsys sweep simulates the quadratic xcorr: shrink it under --fast
+    ggpu_tables.table_memsys(emit, sizes=(32, 256) if fast else (64, 1024))
     import benchmarks.roofline_table as rt
     rt.DRYRUN_DIR = __import__("pathlib").Path("experiments/dryrun")
     emit("roofline/baseline", 0.0, "paper-faithful baseline sweep")

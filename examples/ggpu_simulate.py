@@ -1,13 +1,22 @@
 """Run the paper's micro-benchmarks on the simulated G-GPU.
 
+The launch goes through the ``LaunchQueue`` API (``repro.serve.engine``) —
+submit a ticket, flush, read the result — the same path a multi-kernel
+burst would take (see ``examples/serve_decode.py --ggpu`` for an actual
+batched flush).
+
     PYTHONPATH=src python examples/ggpu_simulate.py --kernel mat_mul --cus 4
+    PYTHONPATH=src python examples/ggpu_simulate.py --kernel xcorr \
+        --cus 8 --memsys banked
 """
 import argparse
 
 import numpy as np
 
-from repro.ggpu.machine import GGPUConfig, ScalarConfig, run_kernel
+from repro.ggpu.engine import MEMSYS_REGISTRY, GGPUConfig, ScalarConfig, \
+    run_kernel
 from repro.ggpu.programs import all_benches
+from repro.serve.engine import LaunchQueue
 
 
 def main():
@@ -15,12 +24,20 @@ def main():
     ap.add_argument("--kernel", default="mat_mul",
                     choices=sorted(all_benches()))
     ap.add_argument("--cus", type=int, default=4, choices=(1, 2, 4, 8))
+    ap.add_argument("--memsys", default="shared",
+                    choices=sorted(MEMSYS_REGISTRY))
+    ap.add_argument("--fuse", type=int, default=4,
+                    help="rounds retired per while_loop iteration")
     args = ap.parse_args()
 
     b = all_benches()[args.kernel]
-    print(f"kernel={args.kernel} items={b.gpu_items} CUs={args.cus}")
-    mem, info = run_kernel(b.gpu_prog, b.gpu_mem, b.gpu_items,
-                           GGPUConfig(n_cus=args.cus))
+    cfg = GGPUConfig(n_cus=args.cus, memsys=args.memsys, fuse=args.fuse)
+    print(f"kernel={args.kernel} items={b.gpu_items} CUs={args.cus} "
+          f"memsys={args.memsys}")
+    queue = LaunchQueue(cfg)
+    ticket = queue.submit(b.gpu_prog, b.gpu_mem, b.gpu_items,
+                          tag=args.kernel)
+    mem, info = queue.flush()[ticket]
     ok = np.array_equal(mem[b.gpu_out], b.ref(b.gpu_mem, b.gpu_n))
     print(f"G-GPU : {info['cycles']:>9d} cycles "
           f"({info['time_us']:.1f} us @500MHz)  "

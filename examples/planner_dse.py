@@ -4,7 +4,7 @@
 """
 from repro.configs import get_config
 from repro.core.meshplanner import plan as mesh_plan
-from repro.core.planner import enumerate_versions, plan
+from repro.core.planner import enumerate_versions, plan, sweep_memsys
 from repro.models.config import SHAPES
 
 
@@ -28,6 +28,12 @@ def main():
         print(f"  {r['n_cus']}CU: fmax={r['fmax_mhz']:6.1f} "
               f"area={r['total_area_mm2']:6.2f}mm^2 mem={r['n_memory']:3d} "
               f"power={r['total_w']:5.2f}W")
+
+    print("\n=== third DSE axis: cache organization (xcorr, reduced) ===")
+    for (c, ms), info in sweep_memsys(bench="xcorr", n_cus=(1, 8),
+                                      sizes=(32, 256)).items():
+        print(f"  {c}CU {ms:10s}: {info['cycles']:>7d} cycles "
+              f"hits/misses={info['hits']}/{info['misses']}")
 
     print("\n=== MeshPlanner: same loop, TPU pod target ===")
     for arch, shape in [("qwen2-vl-72b", "train_4k"),

@@ -1,0 +1,37 @@
+"""G-GPU execution engine: composable pipeline stages for the SIMT
+cycle-approximate simulator.
+
+Stage modules (boundaries documented in DESIGN.md):
+
+  * ``config``    — ``GGPUConfig`` / ``ScalarConfig`` (jit-static knobs,
+    including the ``memsys`` organization and ``fuse`` dispatch width)
+  * ``frontend``  — fetch/decode (min-PC reconvergence), operand read,
+    retire (writeback + PC advance)
+  * ``alu``       — the PE integer datapath, shared with the Pallas twin in
+    ``repro.kernels.pe_simd``
+  * ``memsys``    — the ``MemorySystem`` protocol and cache organizations
+    (``SharedCache``, ``BankedPerCUCache``)
+  * ``scheduler`` — resident-wavefront selection and the lockstep-round
+    cycle model
+  * ``stepper``   — composition root: the jitted ``while_loop`` machine,
+    fused dispatch, and the single/batched launch entry points
+
+``repro.ggpu.machine`` remains as a thin compatibility facade over this
+package.
+"""
+from repro.ggpu.engine.alu import branch_taken, exec_alu, select_alu
+from repro.ggpu.engine.config import GGPUConfig, ScalarConfig
+from repro.ggpu.engine.memsys import (MEMSYS_REGISTRY, BankedPerCUCache,
+                                      CacheResult, MemorySystem, SharedCache,
+                                      get_memsys)
+from repro.ggpu.engine.stepper import (KernelLaunchError, MachineState,
+                                       run_kernel, run_kernel_batch,
+                                       run_kernel_cohort)
+
+__all__ = [
+    "GGPUConfig", "ScalarConfig", "MachineState", "KernelLaunchError",
+    "run_kernel", "run_kernel_batch", "run_kernel_cohort",
+    "exec_alu", "select_alu", "branch_taken",
+    "MemorySystem", "SharedCache", "BankedPerCUCache", "CacheResult",
+    "MEMSYS_REGISTRY", "get_memsys",
+]

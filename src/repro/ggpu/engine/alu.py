@@ -1,0 +1,92 @@
+"""ALU stage: the PE integer datapath, shared by the simulator and the
+Pallas TPU twin.
+
+``select_alu`` is the single source of truth for the select-tree datapath:
+every lane computes the candidate results and the per-wavefront opcode
+selects one. It is written in plain ``jnp`` so the same function body traces
+both inside the ``lax.while_loop`` stepper (``engine.stepper``) and inside
+the Pallas kernel (``repro.kernels.pe_simd``).
+
+``ops_present`` enables decode specialization: ``run_kernel`` passes the
+static set of opcodes that actually appear in the program, and the select
+tree is pruned to just those cases at trace time — the simulator analogue of
+the paper's "pipelining logic on demand" (hardware is only instantiated for
+what the kernel uses). Pruning is result-neutral: a case that is never
+selected contributes nothing.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.ggpu import isa
+
+
+def _mulh32(a, b):
+    """Signed 32x32 -> high 32 bits with pure int32 ops (no int64 needed).
+    Standard decomposition a = a_hi*2^16 + a_lo (a_lo unsigned); all
+    partial products fit int32."""
+    a_lo = a & 0xFFFF
+    a_hi = a >> 16                      # arithmetic
+    b_lo = b & 0xFFFF
+    b_hi = b >> 16
+    t1 = (a_lo * b_lo).astype(jnp.uint32) >> 16
+    t2 = a_hi * b_lo + t1.astype(jnp.int32)
+    t3 = a_lo * b_hi + (t2 & 0xFFFF)
+    return a_hi * b_hi + (t2 >> 16) + (t3 >> 16)
+
+
+def alu_cases(a, b, imm):
+    """The (opcode -> thunk) case table. Thunks defer the arithmetic so a
+    pruned select tree never materializes the unused candidates."""
+    sh = jnp.clip(b, 0, 31)
+    shi = jnp.clip(imm, 0, 31)
+    au = a.astype(jnp.uint32)
+    b_safe = jnp.where(b == 0, 1, b)
+    return [
+        (isa.ADD, lambda: a + b), (isa.SUB, lambda: a - b),
+        (isa.MUL, lambda: a * b), (isa.MULH, lambda: _mulh32(a, b)),
+        (isa.DIV, lambda: jnp.where(b == 0, 0, a // b_safe)),
+        (isa.REM, lambda: jnp.where(b == 0, 0, a % b_safe)),
+        (isa.AND, lambda: a & b), (isa.OR, lambda: a | b),
+        (isa.XOR, lambda: a ^ b),
+        (isa.SLL, lambda: a << sh),
+        (isa.SRL, lambda: (au >> sh.astype(jnp.uint32)).astype(jnp.int32)),
+        (isa.SRA, lambda: a >> sh),
+        (isa.SLT, lambda: (a < b).astype(jnp.int32)),
+        (isa.ADDI, lambda: a + imm), (isa.ANDI, lambda: a & imm),
+        (isa.ORI, lambda: a | imm), (isa.XORI, lambda: a ^ imm),
+        (isa.SLLI, lambda: a << shi),
+        (isa.SRLI, lambda: (au >> shi.astype(jnp.uint32)).astype(jnp.int32)),
+        (isa.SRAI, lambda: a >> shi),
+        (isa.SLTI, lambda: (a < imm).astype(jnp.int32)),
+        (isa.LUI, lambda: jnp.broadcast_to(imm << 12, a.shape)),
+    ]
+
+
+def select_alu(op, a, b, imm, ops_present=None):
+    """Vectorized ALU for one instruction per wavefront.
+
+    op, imm: (W, 1) int32; a, b: (W, L) int32 source values. Returns the
+    (W, L) result. ``ops_present`` (a static container of opcodes, or None
+    for all) prunes the select tree."""
+    result = jnp.zeros_like(a)
+    for code, thunk in alu_cases(a, b, imm):
+        if ops_present is None or code in ops_present:
+            result = jnp.where(op == code, thunk(), result)
+    return result
+
+
+def exec_alu(op, a, b, imm, pc_min=None):
+    """Back-compat entry point (full, unpruned datapath). ``pc_min`` is
+    accepted and ignored, matching the original ``machine.exec_alu``."""
+    return select_alu(op, a, b, imm)
+
+
+def branch_taken(op, a, b, ops_present=None):
+    """Branch resolution for the four conditional branches."""
+    taken = jnp.zeros_like(a, dtype=bool)
+    for code, cmp in ((isa.BEQ, lambda: a == b), (isa.BNE, lambda: a != b),
+                      (isa.BLT, lambda: a < b), (isa.BGE, lambda: a >= b)):
+        if ops_present is None or code in ops_present:
+            taken = jnp.where(op == code, cmp(), taken)
+    return taken

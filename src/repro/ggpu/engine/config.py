@@ -1,0 +1,56 @@
+"""Machine configuration for the G-GPU execution engine.
+
+``GGPUConfig`` is a frozen dataclass so it can serve as a static ``jax.jit``
+argument: every distinct configuration compiles its own stepper. New in the
+engine package (vs the original monolithic ``machine.py``):
+
+  * ``memsys``   — selects the cache organization by registry name
+                   (``"shared"`` | ``"banked"`` | ``"banked-iso"``, see
+                   ``repro.ggpu.engine.memsys``). This is the knob GPUPlanner's
+                   DSE sweeps in addition to memory divisions and pipelines.
+  * ``fuse``     — fused-dispatch width: how many lockstep rounds the stepper
+                   retires per ``while_loop`` iteration. ``fuse=1`` is the
+                   legacy one-instruction-per-iteration dispatch (the memory
+                   pipeline is engaged every round); ``fuse>1`` cuts the trip
+                   count and lets straight-line (no load/store) rounds retire
+                   through a cheap path that skips the memory system entirely.
+
+Both knobs are cycle- and result-neutral for ``memsys="shared"``: they change
+how fast the simulator runs, never what it computes (DESIGN.md §Invariants).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class GGPUConfig:
+    n_cus: int = 1
+    wavefront: int = 64
+    pes_per_cu: int = 8
+    cache_lines: int = 256   # 16 KiB data cache (FGPU default)
+    line_words: int = 16
+    miss_penalty: int = 24
+    dram_line_cycles: int = 4
+    max_wf_per_cu: int = 8
+    ports: int = 4
+    freq_mhz: float = 500.0
+    max_steps: int = 2_000_000
+    memsys: str = "shared"   # cache organization (engine.memsys registry)
+    fuse: int = 4            # rounds retired per while_loop iteration
+
+    @property
+    def issue_cycles(self) -> int:
+        return max(1, self.wavefront // self.pes_per_cu)
+
+
+@dataclass(frozen=True)
+class ScalarConfig(GGPUConfig):
+    """The RISC-V-class in-order scalar baseline: 1 lane, 1 PE, CPI~1,
+    non-pipelined MUL/DIV (CV32E40P-style), single memory port."""
+    n_cus: int = 1
+    wavefront: int = 1
+    pes_per_cu: int = 1
+    ports: int = 1
+    cache_lines: int = 256
+    freq_mhz: float = 667.0

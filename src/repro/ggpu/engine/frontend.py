@@ -1,0 +1,96 @@
+"""Frontend stage: fetch, decode, operand read, and retire.
+
+The SIMT front end of each lockstep round:
+
+  * **fetch** — every wavefront executes the instruction at the *minimum*
+    active PC with the lane mask ``pc == pc_min`` (divergent paths
+    serialize; reconvergence is automatic at the min-PC join);
+  * **decode/operand read** — per-wavefront register-file gather of the two
+    source operands;
+  * **retire** — masked register writeback and PC advance (branch targets
+    are absolute instruction indices).
+
+All helpers are pure (W, L)-tensor functions so the stepper can compose
+them inside ``lax.while_loop`` and ``jax.vmap``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.ggpu import isa
+
+
+class Fetched(NamedTuple):
+    """One decoded instruction per wavefront plus its execution mask."""
+    op: jax.Array      # (W, 1) int32 opcode
+    rd: jax.Array      # (W,)  destination register
+    rs: jax.Array      # (W,)  source register 1
+    rt: jax.Array      # (W,)  source register 2
+    imm: jax.Array     # (W, 1) immediate / branch target
+    pc_min: jax.Array  # (W, 1) the fetched PC
+    exec_m: jax.Array  # (W, L) bool: lanes executing this round
+    a: jax.Array       # (W, L) rs operand values
+    b: jax.Array       # (W, L) rt operand values
+
+
+def fetch_decode(prog, prog_len: int, pc, active, regs) -> Fetched:
+    """Min-PC fetch + operand gather for every wavefront.
+
+    ``regs`` is laid out (W, N_REGS, L) — register-major — so that the
+    per-wavefront operand reads and the writeback are contiguous
+    L-length row windows (one gather/scatter window per wavefront rather
+    than W*L scalars)."""
+    pc_min = jnp.min(jnp.where(active, pc, prog_len), axis=1, keepdims=True)
+    instr = prog[jnp.clip(pc_min[:, 0], 0, prog_len - 1)]       # (W, 5)
+    op = instr[:, 0:1]
+    rd, rs, rt = instr[:, 1], instr[:, 2], instr[:, 3]
+    imm = instr[:, 4:5]
+    exec_m = active & (pc == pc_min)
+    a = jnp.take_along_axis(regs, rs[:, None, None], axis=1)[:, 0]
+    b = jnp.take_along_axis(regs, rt[:, None, None], axis=1)[:, 0]
+    return Fetched(op, rd, rs, rt, imm, pc_min, exec_m, a, b)
+
+
+def apply_intrinsics(res, op, gid, n_items, wavefront: int,
+                     ops_present=None):
+    """SIMT intrinsic results (thread id / item count / workgroup id),
+    overriding the ALU result where the opcode matches."""
+    if ops_present is None or isa.TID in ops_present:
+        res = jnp.where(op == isa.TID, gid, res)
+    if ops_present is None or isa.NITEMS in ops_present:
+        res = jnp.where(op == isa.NITEMS, n_items, res)
+    if ops_present is None or isa.WGID in ops_present:
+        res = jnp.where(op == isa.WGID, gid // wavefront, res)
+    return res
+
+
+def writeback(regs, f: Fetched, res, is_branch, dense: bool = False):
+    """Masked register-file writeback (r0 is hardwired zero; branches and
+    stores write nothing). One contiguous (L,) row-window scatter per
+    wavefront into ``regs`` (W, N_REGS, L) — masked lanes rewrite their
+    previous value — rather than a dense full-register-file select, so a
+    round only touches one register row per wavefront. ``dense=True``
+    keeps the original full select (the legacy reference stepper); both
+    produce identical register files."""
+    do_wr = f.exec_m & (f.rd[:, None] != 0) \
+        & (~is_branch[f.op[:, 0]][:, None]) & (~(f.op == isa.SW))
+    if dense:
+        return jnp.where(
+            do_wr[:, None, :]
+            & (jnp.arange(isa.N_REGS)[None, :, None]
+               == f.rd[:, None, None]),
+            res[:, None, :], regs)
+    prev = jnp.take_along_axis(regs, f.rd[:, None, None], axis=1)[:, 0]
+    return regs.at[jnp.arange(regs.shape[0]), f.rd].set(
+        jnp.where(do_wr, res, prev))
+
+
+def advance(pc, done, f: Fetched, taken):
+    """PC update (fallthrough or absolute branch target) and HALT retire."""
+    pc_next = jnp.where(taken, f.imm, f.pc_min + 1)
+    pc = jnp.where(f.exec_m, pc_next, pc)
+    done = done | (f.exec_m & (f.op == isa.HALT))
+    return pc, done

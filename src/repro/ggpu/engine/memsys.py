@@ -1,0 +1,231 @@
+"""Memory-system stage: pluggable cache organizations behind one protocol.
+
+The functional memory (the flat word array, masked loads/stores through the
+write sink) is organization-independent and lives in ``load_store``. What a
+``MemorySystem`` models is the *cycle cost* of a round's coalesced memory
+traffic — the component the paper identifies as the make-or-break of a
+G-GPU version ("breaking the memory hierarchy in a smart fashion").
+
+The stepper simulates ``n_elems`` independent machines at once (cohort
+batching: a kernel launch batch folded into the wavefront axis), so every
+organization keeps per-element tag state and returns per-element cycle
+terms. Single launches are simply ``n_elems == 1``.
+
+Protocol (structural; implementations are frozen dataclasses so a config
+naming them stays hashable/jit-static):
+
+    init_tags(cfg, n_elems)  -> tag-state array (threaded through the loop)
+    access(tags, addr, mem_mask, *, cu_of_w, elem_of_w, n_elems, cfg)
+        -> CacheResult
+
+``addr`` is element-local. ``CacheResult`` carries the updated tag state,
+per-lane hit/miss masks (for stats), and two (n_elems,) cycle terms the
+scheduler folds into each element's round time:
+
+    hit_service  — cycles for hit traffic to stream through the data movers
+    fill_cycles  — cycles of DRAM fill bandwidth for missed lines
+
+Implementations:
+
+  * ``SharedCache``     — the FGPU model: one central direct-mapped
+    write-back cache with ``cfg.ports`` movers shared by all CUs. Port
+    contention on this shared structure is why the paper's 8-CU
+    xcorr/parallel_sel *lose* performance. Cycle-identical to the original
+    ``machine.py`` cost model (``one_hot=True`` reproduces its exact
+    scatter-based op sequence for the legacy reference stepper).
+  * ``BankedPerCUCache`` — one private direct-mapped bank per CU, each with
+    its own ``cfg.ports`` movers (aggregate hit bandwidth scales with CU
+    count; banks fill independently from the shared DRAM path, no cross-CU
+    MSHR coalescing). ``iso_capacity=True`` splits ``cfg.cache_lines``
+    across the banks (area-neutral sweep point); ``False`` gives every bank
+    the full ``cfg.cache_lines`` (the throw-area-at-it sweep point the
+    8-CU xcorr thrashing motivates).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def unique_count(vals, valid, sentinel, axis=-1):
+    """Number of distinct ``vals`` among ``valid`` entries, per row.
+
+    Sort-based (invalid entries map to ``sentinel``, which must exceed any
+    valid value): a sorted run's first element marks each distinct value.
+    Replaces one-hot scatter-max counting — same counts, but sorts
+    vectorize on CPU where scatters serialize."""
+    v = jnp.sort(jnp.where(valid, vals, sentinel), axis=axis)
+    first = jnp.concatenate(
+        [jnp.ones_like(jnp.take(v, jnp.array([0]), axis=axis), bool),
+         jnp.take(v, jnp.arange(1, v.shape[axis]), axis=axis)
+         != jnp.take(v, jnp.arange(0, v.shape[axis] - 1), axis=axis)],
+        axis=axis)
+    return jnp.sum(first & (v != sentinel), axis=axis)
+
+
+class CacheResult(NamedTuple):
+    tags: jax.Array          # updated tag state
+    hit: jax.Array           # (W, L) bool — lanes that hit
+    miss: jax.Array          # (W, L) bool — lanes that missed
+    hit_service: jax.Array   # (n_elems,) int32 — mover cycles, hit traffic
+    fill_cycles: jax.Array   # (n_elems,) int32 — DRAM fill cycles
+
+
+@runtime_checkable
+class MemorySystem(Protocol):
+    name: str
+
+    def init_tags(self, cfg, n_elems: int) -> jax.Array: ...
+
+    def access(self, tags, addr, mem_mask, *, cu_of_w, elem_of_w,
+               n_elems: int, cfg) -> CacheResult: ...
+
+
+def load_store(mem, addr, store_val, exec_m, is_load, is_store, sink: int,
+               always_scatter: bool = False):
+    """Functional memory access, identical for every organization.
+
+    Masked store: inactive lanes write the sink slot (index ``sink``, the
+    last word); masked load: inactive lanes read the sink (never written
+    back). The store scatter only runs in rounds where some wavefront
+    actually stores — a load-only round would scatter nothing but sink
+    writes, and the sink is architecturally invisible
+    (``always_scatter=True`` keeps the unconditional scatter of the legacy
+    reference stepper). Returns (new_mem, loaded, mem_mask)."""
+    mem_mask = exec_m & (is_load | is_store)
+    loaded = mem[jnp.where(mem_mask, addr, sink)]
+
+    def do_store(m):
+        waddr = jnp.where(exec_m & is_store, addr, sink)
+        return m.at[waddr].set(store_val)
+
+    if always_scatter:
+        mem = do_store(mem)
+    else:
+        mem = jax.lax.cond(jnp.any(is_store), do_store, lambda m: m, mem)
+    return mem, loaded, mem_mask
+
+
+def _per_elem_sum(x, n_elems: int):
+    return jnp.sum(x.reshape(n_elems, -1), axis=1)
+
+
+@dataclass(frozen=True)
+class SharedCache:
+    """One central multi-port cache shared by all CUs (the paper's model);
+    one such cache per simulated element."""
+    name: str = "shared"
+
+    def init_tags(self, cfg, n_elems: int) -> jax.Array:
+        return jnp.full((n_elems, cfg.cache_lines), -1, jnp.int32)
+
+    def access(self, tags, addr, mem_mask, *, cu_of_w, elem_of_w,
+               n_elems: int, cfg, one_hot: bool = False) -> CacheResult:
+        line_shift = int(np.log2(cfg.line_words))
+        line = (addr >> line_shift) % cfg.cache_lines
+        tag = addr >> line_shift
+        elem_b = jnp.broadcast_to(elem_of_w[:, None], addr.shape)
+        line_m = jnp.where(mem_mask, line, 0)
+        hit = (tags[jnp.where(mem_mask, elem_b, 0), line_m] == tag) & mem_mask
+        miss = mem_mask & ~hit
+        new_tags = tags.at[jnp.where(miss, elem_b, n_elems),
+                           jnp.where(miss, line, 0)].set(tag, mode="drop")
+        # Port traffic: lanes of one wavefront coalesce into per-line
+        # requests, but DISTINCT wavefronts issue distinct requests even for
+        # the same line -> count per-wavefront unique hit lines. DRAM fills
+        # coalesce globally (MSHR): count per-element-unique missed lines.
+        if one_hot:
+            # the original machine.py op sequence (scatter-max one-hot),
+            # kept as the seed-faithful reference; single element only
+            assert n_elems == 1
+            W = addr.shape[0]
+            w_ix = jnp.broadcast_to(jnp.arange(W)[:, None], line.shape)
+            t_hit = jnp.zeros((W, cfg.cache_lines + 1), jnp.int32).at[
+                w_ix, jnp.where(hit, line, cfg.cache_lines)].max(
+                    1, mode="drop")
+            hit_lines = jnp.sum(t_hit[:, :-1])[None]
+            t_miss = jnp.zeros((cfg.cache_lines + 1,), jnp.int32).at[
+                jnp.where(miss, line, cfg.cache_lines)].max(1, mode="drop")
+            miss_lines = jnp.sum(t_miss[:-1])[None]
+        else:
+            hit_lines = _per_elem_sum(unique_count(line, hit,
+                                                   cfg.cache_lines), n_elems)
+            miss_lines = unique_count(line.reshape(n_elems, -1),
+                                      miss.reshape(n_elems, -1),
+                                      cfg.cache_lines)
+        hit_service = (hit_lines + cfg.ports - 1) // cfg.ports
+        fill_cycles = miss_lines * cfg.dram_line_cycles
+        return CacheResult(new_tags, hit, miss, hit_service, fill_cycles)
+
+
+@dataclass(frozen=True)
+class BankedPerCUCache:
+    """Per-CU private banks; each bank has its own movers and fills its own
+    missed lines — the DSE counterpoint to the shared organization."""
+    iso_capacity: bool = False
+
+    @property
+    def name(self) -> str:
+        return "banked-iso" if self.iso_capacity else "banked"
+
+    def lines(self, cfg) -> int:
+        if self.iso_capacity:
+            return max(1, cfg.cache_lines // cfg.n_cus)
+        return cfg.cache_lines
+
+    def init_tags(self, cfg, n_elems: int) -> jax.Array:
+        return jnp.full((n_elems * cfg.n_cus, self.lines(cfg)), -1,
+                        jnp.int32)
+
+    def access(self, tags, addr, mem_mask, *, cu_of_w, elem_of_w,
+               n_elems: int, cfg) -> CacheResult:
+        n_cus = cfg.n_cus
+        lines = self.lines(cfg)
+        n_banks = n_elems * n_cus
+        line_shift = int(np.log2(cfg.line_words))
+        line = (addr >> line_shift) % lines
+        tag = addr >> line_shift
+        bank_of_w = elem_of_w * n_cus + cu_of_w                 # (W,)
+        bank_b = jnp.broadcast_to(bank_of_w[:, None], addr.shape)
+        line_m = jnp.where(mem_mask, line, 0)
+        hit = (tags[jnp.where(mem_mask, bank_b, 0), line_m] == tag) \
+            & mem_mask
+        miss = mem_mask & ~hit
+        new_tags = tags.at[jnp.where(miss, bank_b, n_banks),
+                           jnp.where(miss, line, 0)].set(tag, mode="drop")
+        # Per-wavefront unique hit lines (lane coalescing), summed per
+        # bank; each bank streams its own traffic through `ports` movers,
+        # banks run concurrently -> an element's slowest bank sets its
+        # service time.
+        per_wf = unique_count(line, hit, lines)                 # (W,)
+        per_bank = jnp.zeros((n_banks,), jnp.int32).at[bank_of_w].add(per_wf)
+        hit_service = jnp.max(
+            (per_bank.reshape(n_elems, n_cus) + cfg.ports - 1) // cfg.ports,
+            axis=1)
+        # Per-bank unique missed slots each pay a DRAM fill on the shared
+        # AXI path (no cross-CU coalescing: distinct banks fill separately).
+        slot = bank_b * lines + line
+        fill_cycles = unique_count(slot.reshape(n_elems, -1),
+                                   miss.reshape(n_elems, -1),
+                                   n_banks * lines) * cfg.dram_line_cycles
+        return CacheResult(new_tags, hit, miss, hit_service, fill_cycles)
+
+
+MEMSYS_REGISTRY = {
+    "shared": SharedCache(),
+    "banked": BankedPerCUCache(iso_capacity=False),
+    "banked-iso": BankedPerCUCache(iso_capacity=True),
+}
+
+
+def get_memsys(name: str) -> MemorySystem:
+    try:
+        return MEMSYS_REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown memsys {name!r}; choices: {sorted(MEMSYS_REGISTRY)}"
+        ) from None

@@ -1,0 +1,66 @@
+"""Scheduler stage: resident-wavefront selection and the lockstep-round
+cycle model.
+
+One "round" = every resident wavefront issues one instruction. The round
+time is max(slowest CU's issue work, memory hit service) plus the DRAM fill
+term — the model under which FGPU's round-robin issue hides memory latency
+until every resident wavefront is stalled (DESIGN.md §Cycle model).
+
+Both helpers operate on a cohort of ``n_elems`` independent machines folded
+into the wavefront axis (element e owns wavefronts [e*W, (e+1)*W)); cycle
+accounting is per element. Single launches are ``n_elems == 1``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def select_resident(done, *, n_cus: int, max_wf_per_cu: int,
+                    n_elems: int = 1, force_rank: bool = False):
+    """FGPU holds at most ``max_wf_per_cu`` resident wavefronts per CU:
+    rank each live wavefront within its element's CU (w = i*n_cus + cu
+    order) and run only the first ``max_wf_per_cu``. This is why 8 CUs
+    have an 8x larger concurrent working set — and why the paper's xcorr
+    THRASHES.
+
+    When every machine can hold all of its wavefronts at once the ranking
+    is statically a no-op and is skipped (``force_rank`` disables the
+    shortcut for the legacy reference stepper) — also lifting the old
+    requirement that W divide evenly into CU columns.
+
+    Returns (active (W, L) lane mask, resident (W,) wavefront mask)."""
+    W = done.shape[0] // n_elems
+    active = ~done                                       # (n_elems*W, L)
+    live = jnp.any(active, axis=1)                       # (n_elems*W,)
+    if W <= n_cus * max_wf_per_cu and not force_rank:
+        resident = live
+    else:
+        live_mat = live.reshape(n_elems, -1, n_cus)
+        rank = jnp.cumsum(live_mat.astype(jnp.int32), axis=1) - 1
+        resident = (live_mat & (rank < max_wf_per_cu)).reshape(-1)
+    return active & resident[:, None], resident
+
+
+def round_cost(op_col, exec_m, *, extra, issue_cycles: int, cu_of_w,
+               n_cus: int, n_elems: int, hit_service, fill_cycles,
+               use_scatter: bool = False):
+    """Per-element cycle cost of one lockstep round.
+
+    CU-side: issue cycles (+ non-pipelined op extras) summed over each CU's
+    issuing wavefronts; memory-side: hit traffic streams through the data
+    movers concurrently with issue, while DRAM fills serialize on the
+    AXI/DRAM path and cannot be hidden once every resident wavefront is
+    stalled on them. Returns (round_cycles (n_elems,), wf_exec (W,))."""
+    wf_exec = jnp.any(exec_m, axis=1)                    # (n_elems*W,)
+    base = (issue_cycles + extra[op_col]) * wf_exec.astype(jnp.int32)
+    W = base.shape[0] // n_elems
+    if W % n_cus == 0 and not use_scatter:
+        # within an element, cu_of_w = w % n_cus: reshape-sum == scatter-add
+        cu_issue = jnp.sum(base.reshape(n_elems, -1, n_cus), axis=1)
+    else:
+        elem_of_w = jnp.repeat(jnp.arange(n_elems, dtype=jnp.int32), W)
+        cu_issue = jnp.zeros((n_elems * n_cus,), jnp.int32).at[
+            elem_of_w * n_cus + cu_of_w].add(base).reshape(n_elems, n_cus)
+    round_t = jnp.maximum(jnp.max(cu_issue, axis=1), hit_service) \
+        + fill_cycles
+    return round_t, wf_exec

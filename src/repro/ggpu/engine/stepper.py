@@ -1,0 +1,355 @@
+"""Stepper: composes the engine stages into the jitted SIMT machine.
+
+The whole machine is one ``jax.lax.while_loop`` over vectorized (W, L)
+tensors, jitted once per (program shape, config, opcode set). Each loop
+iteration retires up to ``cfg.fuse`` lockstep rounds (**fused dispatch**);
+within a fused iteration, a round whose in-flight instructions are all
+straight-line (no load/store) takes a fast path that skips the memory
+system entirely. Both are wall-clock optimizations only: results, cycles,
+and stats are bit-identical to one-round-per-iteration dispatch
+(DESIGN.md §Invariants).
+
+The core simulates a **cohort** of ``B`` independent machines by folding
+the batch into the wavefront axis (element e owns wavefronts
+[e*W, (e+1)*W) and the memory words [e*M, (e+1)*M)); cycles/stats/steps
+are tracked per element. ``B == 1`` is the single-launch case.
+
+Entry points:
+
+  * ``run_kernel``        — single launch; exact signature and bit-exact
+    results of the original monolithic ``machine.run_kernel``.
+    ``legacy=True`` selects the seed-faithful reference stepper
+    (one round per iteration, one-hot scatter cache accounting, dense
+    writeback, unpruned datapath) for differential testing/benchmarks.
+  * ``run_kernel_cohort`` — N launches of the *same kernel* (program,
+    n_items, memory shape) over different memory images, folded into one
+    stepper call: per-round fixed costs are amortized across the cohort
+    and the straight-line fast path stays a real branch. This is the fast
+    multi-launch path ``serve.engine.LaunchQueue`` uses.
+  * ``run_kernel_batch``  — N heterogeneous launches, padded to a common
+    (program, mem) envelope and ``jax.vmap``-ed over the stepper. Fully
+    general (different programs), but vmap turns the fast-path branch into
+    a select, so prefer cohorts where shapes allow.
+
+Per-launch cycles/stats are exact in all three: padding a program with
+HALT words and a memory image with zeros is state-invisible to the
+machine, and cohort elements are fully isolated.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ggpu import isa
+from repro.ggpu.engine import alu, frontend, scheduler
+from repro.ggpu.engine.config import GGPUConfig
+from repro.ggpu.engine.memsys import SharedCache, get_memsys, load_store
+
+
+class MachineState(NamedTuple):
+    pc: jax.Array          # (B*W, L) int32
+    regs: jax.Array        # (B*W, 32, L) int32 (register-major: row reads)
+    done: jax.Array        # (B*W, L) bool
+    mem: jax.Array         # (B*M+1,) int32 (last slot = write sink)
+    tags: jax.Array        # memsys tag state (shape per organization)
+    cycles: jax.Array      # (B,) int32 (lockstep-round total per element)
+    stats: jax.Array       # (B, 4) int32: instrs, mem_ops, hits, misses
+    step: jax.Array        # (B,) int32
+
+
+def _n_wavefronts(n_items: int, cfg: GGPUConfig) -> int:
+    L = cfg.wavefront
+    W = (n_items + L - 1) // L
+    # the per-CU residency ranking reshapes (W,) -> (W/n_cus, n_cus); round
+    # W up with always-done wavefronts when it would be ragged (state of an
+    # invalid wavefront never changes, so this is result/cycle-neutral)
+    if W > cfg.n_cus * cfg.max_wf_per_cu and W % cfg.n_cus:
+        W += cfg.n_cus - W % cfg.n_cus
+    return W
+
+
+def _build_core(cfg: GGPUConfig, B: int, W: int, prog_len: int, msize: int,
+                ops, legacy: bool = False):
+    """Returns ``core(prog, mem_flat, n_items) -> MachineState`` for one
+    static machine shape: ``B`` cohort elements of ``W`` wavefronts each,
+    ``mem_flat`` the concatenated (B*msize,) memory images. ``ops`` is the
+    static opcode set for decode specialization (None = unpruned);
+    ``legacy`` selects the seed-faithful reference round."""
+    L = cfg.wavefront
+    n_cus = cfg.n_cus
+    memsys = get_memsys(cfg.memsys)
+    if legacy and not isinstance(memsys, SharedCache):
+        raise ValueError("legacy reference stepper only models 'shared'")
+    fuse = 1 if legacy else max(1, cfg.fuse)
+    ops_present = None if ops is None else frozenset(ops)
+    has_mem = ops_present is None or bool({isa.LW, isa.SW} & ops_present)
+
+    elem_of_w = jnp.repeat(jnp.arange(B, dtype=jnp.int32), W)   # (B*W,)
+    cu_of_w = jnp.tile(jnp.arange(W, dtype=jnp.int32) % n_cus, B)
+    gid = jnp.tile(
+        (jnp.arange(W)[:, None] * L + jnp.arange(L)[None, :])
+        .astype(jnp.int32), (B, 1))                             # elem-local
+    mem_off = (elem_of_w * msize)[:, None]                      # (B*W, 1)
+    sink = B * msize
+    is_branch = jnp.asarray(isa.IS_BRANCH)
+    extra = jnp.asarray(
+        isa.SCALAR_EXTRA if cfg.pes_per_cu == 1 else isa.GPU_EXTRA)
+    zeros_e = jnp.zeros((B,), jnp.int32)
+
+    def per_elem_sum(x):
+        return jnp.sum(x.reshape(B, -1), axis=1).astype(jnp.int32)
+
+    def core(prog, mem_flat, n_items, msize_clip):
+        """``msize_clip`` is the launch's own memory size (traced): the
+        address clip must bind at each launch's boundary, not the padded
+        batch envelope, or an out-of-range access would read the padding
+        instead of the launch's last word as a single run does."""
+        n_items = n_items.astype(jnp.int32)
+        msize_clip = msize_clip.astype(jnp.int32)
+        lane_valid = gid < n_items
+        st = MachineState(
+            pc=jnp.zeros((B * W, L), jnp.int32),
+            regs=jnp.zeros((B * W, isa.N_REGS, L), jnp.int32),
+            done=~lane_valid,
+            mem=jnp.concatenate([mem_flat, jnp.zeros((1,), jnp.int32)]),
+            tags=memsys.init_tags(cfg, B),
+            cycles=jnp.zeros((B,), jnp.int32),
+            stats=jnp.zeros((B, 4), jnp.int32),
+            step=jnp.zeros((B,), jnp.int32),
+        )
+
+        def round_step(s: MachineState) -> MachineState:
+            # masking `active` by each element's running predicate makes a
+            # post-halt (or past-max_steps) round an exact no-op for that
+            # element — no per-round control flow needed, which keeps fused
+            # sub-rounds branch-free while step/cycle accounting stays
+            # identical to one-round-per-iteration dispatch
+            runvec = (~jnp.all(s.done.reshape(B, -1), axis=1)) \
+                & (s.step < cfg.max_steps)                      # (B,)
+            active, _ = scheduler.select_resident(
+                s.done, n_cus=n_cus, max_wf_per_cu=cfg.max_wf_per_cu,
+                n_elems=B, force_rank=legacy)
+            active = active & jnp.repeat(runvec, W)[:, None]
+            f = frontend.fetch_decode(prog, prog_len, s.pc, active, s.regs)
+            res = alu.select_alu(f.op, f.a, f.b, f.imm, ops_present)
+            res = frontend.apply_intrinsics(res, f.op, gid, n_items, L,
+                                            ops_present)
+
+            def mem_round(res):
+                addr_local = jnp.clip(f.a + f.imm, 0, msize_clip - 1)
+                is_load = f.op == isa.LW
+                is_store = f.op == isa.SW
+                mem, loaded, mem_mask = load_store(
+                    s.mem, addr_local + mem_off, f.b, f.exec_m, is_load,
+                    is_store, sink, always_scatter=legacy)
+                res = jnp.where(is_load, loaded, res)
+                if legacy:
+                    cr = memsys.access(s.tags, addr_local, mem_mask,
+                                       cu_of_w=cu_of_w, elem_of_w=elem_of_w,
+                                       n_elems=B, cfg=cfg, one_hot=True)
+                else:
+                    cr = memsys.access(s.tags, addr_local, mem_mask,
+                                       cu_of_w=cu_of_w, elem_of_w=elem_of_w,
+                                       n_elems=B, cfg=cfg)
+                return (res, mem, cr.tags, cr.hit_service, cr.fill_cycles,
+                        per_elem_sum(mem_mask), per_elem_sum(cr.hit),
+                        per_elem_sum(cr.miss))
+
+            def alu_round(res):
+                return (res, s.mem, s.tags, zeros_e, zeros_e, zeros_e,
+                        zeros_e, zeros_e)
+
+            if not has_mem:
+                out = alu_round(res)
+            elif fuse > 1:
+                # fused-dispatch fast path: straight-line rounds (no lane
+                # touching memory) skip the cache model and the mem scatter
+                any_mem = jnp.any((f.op == isa.LW) | (f.op == isa.SW))
+                out = jax.lax.cond(any_mem, mem_round, alu_round, res)
+            else:                      # legacy dispatch: memsys every round
+                out = mem_round(res)
+            res, mem, tags, hit_service, fill, n_mem, n_hit, n_miss = out
+
+            regs = frontend.writeback(s.regs, f, res, is_branch,
+                                      dense=legacy)
+            taken = alu.branch_taken(f.op, f.a, f.b, ops_present) & f.exec_m
+            pc, done = frontend.advance(s.pc, s.done, f, taken)
+            round_t, wf_exec = scheduler.round_cost(
+                f.op[:, 0], f.exec_m, extra=extra,
+                issue_cycles=cfg.issue_cycles, cu_of_w=cu_of_w,
+                n_cus=n_cus, n_elems=B, hit_service=hit_service,
+                fill_cycles=fill, use_scatter=legacy)
+            cycles = s.cycles + round_t.astype(jnp.int32)
+            stats = s.stats + jnp.stack(
+                [per_elem_sum(wf_exec), n_mem, n_hit, n_miss], axis=1)
+            return MachineState(pc, regs, done, mem, tags, cycles, stats,
+                                s.step + runvec.astype(jnp.int32))
+
+        def still_running(s: MachineState):
+            return jnp.any((~jnp.all(s.done.reshape(B, -1), axis=1))
+                           & (s.step < cfg.max_steps))
+
+        if fuse == 1:
+            body = round_step
+        else:
+            # fused dispatch: retire up to `fuse` rounds per while_loop
+            # iteration (fori_loop keeps the compiled body single-copy)
+            def body(s: MachineState) -> MachineState:
+                return jax.lax.fori_loop(
+                    0, fuse, lambda _, x: round_step(x), s)
+
+        return jax.lax.while_loop(still_running, body, st)
+
+    return core
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "W", "prog_len", "ops", "legacy"))
+def _run_single(prog, mem0, n_items, cfg, W, prog_len, ops, legacy=False):
+    msize = mem0.shape[0]
+    return _build_core(cfg, 1, W, prog_len, msize, ops, legacy)(
+        prog, mem0, n_items, jnp.asarray(msize, jnp.int32))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "B", "W", "prog_len", "ops"))
+def _run_cohort(prog, mems_flat, n_items, cfg, B, W, prog_len, ops):
+    msize = mems_flat.shape[0] // B
+    return _build_core(cfg, B, W, prog_len, msize, ops)(
+        prog, mems_flat, n_items, jnp.asarray(msize, jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "W", "prog_len", "ops"))
+def _run_batch(progs, mems, n_items, msizes, cfg, W, prog_len, ops):
+    core = _build_core(cfg, 1, W, prog_len, mems.shape[1], ops)
+    return jax.vmap(core)(progs, mems, n_items, msizes)
+
+
+class KernelLaunchError(RuntimeError):
+    """A launch did not halt within ``cfg.max_steps``. ``index`` is the
+    position of the failing launch within the call's own argument list."""
+
+    def __init__(self, message: str, index: int = 0):
+        super().__init__(message)
+        self.index = index
+
+
+def _static_ops(prog: np.ndarray):
+    return tuple(sorted({int(o) for o in prog[:, 0]}))
+
+
+def _info(cycles: int, stats, steps: int, cfg: GGPUConfig) -> dict:
+    return {
+        "cycles": cycles,
+        "instrs": int(stats[0]),
+        "mem_ops": int(stats[1]),
+        "hits": int(stats[2]),
+        "misses": int(stats[3]),
+        "steps": steps,
+        "time_us": float(cycles / cfg.freq_mhz),
+        "memsys": cfg.memsys,
+    }
+
+
+def run_kernel(prog: np.ndarray, mem0: np.ndarray, n_items: int,
+               cfg: GGPUConfig, *, legacy: bool = False):
+    """Execute a kernel. Returns (mem_final, info dict).
+
+    ``legacy=True`` runs the seed-faithful reference stepper (identical
+    results and cycles, pre-refactor wall-clock) for differential testing
+    and as the baseline of ``benchmarks.engine_bench``."""
+    prog = np.asarray(prog, np.int32)
+    final = _run_single(
+        jnp.asarray(prog), jnp.asarray(mem0, jnp.int32),
+        jnp.asarray(int(n_items), jnp.int32), cfg,
+        _n_wavefronts(int(n_items), cfg), int(prog.shape[0]),
+        None if legacy else _static_ops(prog), legacy)
+    if not bool(np.asarray(final.done).all()):
+        raise KernelLaunchError("kernel hit max_steps without halting")
+    cycles = int(np.asarray(final.cycles)[0])
+    return np.asarray(final.mem)[:-1], _info(
+        cycles, np.asarray(final.stats)[0], int(np.asarray(final.step)[0]),
+        cfg)
+
+
+def run_kernel_cohort(prog: np.ndarray, mems: Sequence[np.ndarray],
+                      n_items: int, cfg: GGPUConfig
+                      ) -> List[Tuple[np.ndarray, dict]]:
+    """Execute the same kernel over B memory images as one folded stepper
+    call (B*W wavefronts, per-element accounting). Bit-exact per launch."""
+    prog = np.asarray(prog, np.int32)
+    mems = [np.asarray(m, np.int32) for m in mems]
+    if not mems:
+        return []
+    msize = mems[0].shape[0]
+    if any(m.shape[0] != msize for m in mems):
+        raise ValueError("cohort memory images must share one shape")
+    B = len(mems)
+    final = _run_cohort(
+        jnp.asarray(prog), jnp.asarray(np.concatenate(mems)),
+        jnp.asarray(int(n_items), jnp.int32), cfg, B,
+        _n_wavefronts(int(n_items), cfg), int(prog.shape[0]),
+        _static_ops(prog))
+    done = np.asarray(final.done).reshape(B, -1)
+    mem_f = np.asarray(final.mem)[:-1].reshape(B, msize)
+    cycles = np.asarray(final.cycles)
+    stats = np.asarray(final.stats)
+    steps = np.asarray(final.step)
+    out = []
+    for i in range(B):
+        if not done[i].all():
+            raise KernelLaunchError(
+                f"cohort kernel {i} hit max_steps without halting", i)
+        info = _info(int(cycles[i]), stats[i], int(steps[i]), cfg)
+        info["batch_size"] = B
+        out.append((mem_f[i], info))
+    return out
+
+
+def run_kernel_batch(progs: Sequence[np.ndarray],
+                     mems: Sequence[np.ndarray],
+                     n_items: Sequence[int],
+                     cfg: GGPUConfig) -> List[Tuple[np.ndarray, dict]]:
+    """Execute N heterogeneous kernel launches as one vmapped stepper call.
+
+    Programs are padded to a common length with HALT words and memory
+    images zero-padded to a common size; per-launch results and cycle
+    counts are exact (the padding is invisible to the machine — each
+    launch's address clip still binds at its own memory size). Returns a
+    list of (mem_final, info) in submission order."""
+    if not (len(progs) == len(mems) == len(n_items)):
+        raise ValueError("progs, mems, n_items must have equal length")
+    if not progs:
+        return []
+    progs = [np.asarray(p, np.int32) for p in progs]
+    mems = [np.asarray(m, np.int32) for m in mems]
+    P = max(p.shape[0] for p in progs)
+    M = max(m.shape[0] for m in mems)
+    prog_b = np.stack([np.pad(p, ((0, P - p.shape[0]), (0, 0)))
+                       for p in progs])                  # HALT == all-zeros
+    mem_b = np.stack([np.pad(m, (0, M - m.shape[0])) for m in mems])
+    W = max(_n_wavefronts(int(n), cfg) for n in n_items)
+    ops = tuple(sorted(set().union(*(_static_ops(p) for p in progs))))
+    final = _run_batch(
+        jnp.asarray(prog_b), jnp.asarray(mem_b),
+        jnp.asarray(np.asarray(n_items, np.int32)),
+        jnp.asarray(np.array([m.shape[0] for m in mems], np.int32)),
+        cfg, W, P, ops)
+    done = np.asarray(final.done)
+    mem_f = np.asarray(final.mem)[:, :-1]
+    cycles = np.asarray(final.cycles)[:, 0]
+    stats = np.asarray(final.stats)[:, 0]
+    steps = np.asarray(final.step)[:, 0]
+    out = []
+    for i, m in enumerate(mems):
+        if not done[i].all():
+            raise KernelLaunchError(
+                f"batched kernel {i} hit max_steps without halting", i)
+        info = _info(int(cycles[i]), stats[i], int(steps[i]), cfg)
+        info["batch_size"] = len(progs)
+        out.append((mem_f[i, :m.shape[0]], info))
+    return out

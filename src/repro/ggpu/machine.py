@@ -1,5 +1,19 @@
 """Cycle-approximate SIMT simulator of the G-GPU, in JAX.
 
+Compatibility facade: the monolithic simulator that used to live here has
+been split into the composable execution-engine package
+``repro.ggpu.engine`` (stage boundaries, cycle model, and the
+``MemorySystem`` protocol are documented in DESIGN.md):
+
+  * ``engine.frontend``  — fetch/decode with min-PC reconvergence
+  * ``engine.alu``       — the PE datapath (shared with the Pallas twin in
+    ``repro.kernels.pe_simd``)
+  * ``engine.memsys``    — pluggable cache organizations (the paper's
+    central shared cache, plus banked per-CU variants for DSE)
+  * ``engine.scheduler`` — resident-wavefront selection + lockstep rounds
+  * ``engine.stepper``   — the jitted ``while_loop`` machine, fused
+    dispatch, and batched (vmapped) multi-kernel launches
+
 Architecture model (FGPU per the paper):
   * a G-GPU has ``n_cus`` Compute Units; each CU is a SIMD machine of 8
     Processing Elements, so a 64-item wavefront issues over 64/8 = 8 cycles;
@@ -7,282 +21,24 @@ Architecture model (FGPU per the paper):
     among its resident wavefronts (which is what hides memory latency);
   * full thread divergence: every work-item has its own PC; each step a
     wavefront executes the instruction at the *minimum* active PC with the
-    lane mask ``pc == pc_min`` (divergent paths serialize, reconvergence is
-    automatic at the min-PC join) — the standard SIMT serialization model;
-  * one central, direct-mapped, write-back data cache shared by all CUs
-    with ``ports`` data movers (the paper's multi-port cache). Port
-    contention — the reason the paper's 8-CU xcorr/parallel_sel *lose*
-    performance — is modeled as a shared issue budget of cache lines per
-    cycle.
+    lane mask ``pc == pc_min`` — the standard SIMT serialization model;
+  * the default memory system is one central, direct-mapped, write-back
+    data cache shared by all CUs with ``ports`` data movers (the paper's
+    multi-port cache), whose port contention is the reason the paper's
+    8-CU xcorr/parallel_sel *lose* performance.
 
 The functional state (registers, memory) is exact; cycles are approximate
-per the cost model above (documented in DESIGN.md). The whole stepper is a
-``jax.lax.while_loop`` over vectorized (W, L) tensors, jitted once per
-program shape; the PE execute stage has a Pallas TPU kernel twin
-(``repro.kernels.pe_simd``) validated against ``exec_alu`` below.
+per the cost model above. ``run_kernel`` keeps its original signature and
+bit-exact results; ``run_kernel_batch`` is the new multi-launch path.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-from typing import NamedTuple
+from repro.ggpu.engine import (GGPUConfig, MachineState, ScalarConfig,
+                               exec_alu, run_kernel, run_kernel_batch,
+                               run_kernel_cohort)
+from repro.ggpu.engine.alu import _mulh32, branch_taken as _branch_taken
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.ggpu import isa
-
-
-@dataclass(frozen=True)
-class GGPUConfig:
-    n_cus: int = 1
-    wavefront: int = 64
-    pes_per_cu: int = 8
-    cache_lines: int = 256   # 16 KiB data cache (FGPU default)
-    line_words: int = 16
-    miss_penalty: int = 24
-    dram_line_cycles: int = 4
-    max_wf_per_cu: int = 8
-    ports: int = 4
-    freq_mhz: float = 500.0
-    max_steps: int = 2_000_000
-
-    @property
-    def issue_cycles(self) -> int:
-        return max(1, self.wavefront // self.pes_per_cu)
-
-
-@dataclass(frozen=True)
-class ScalarConfig(GGPUConfig):
-    """The RISC-V-class in-order scalar baseline: 1 lane, 1 PE, CPI~1,
-    non-pipelined MUL/DIV (CV32E40P-style), single memory port."""
-    n_cus: int = 1
-    wavefront: int = 1
-    pes_per_cu: int = 1
-    ports: int = 1
-    cache_lines: int = 256
-    freq_mhz: float = 667.0
-
-
-class MachineState(NamedTuple):
-    pc: jax.Array          # (W, L) int32
-    regs: jax.Array        # (W, L, 32) int32
-    done: jax.Array        # (W, L) bool
-    mem: jax.Array         # (M+1,) int32 (last slot = write sink)
-    tags: jax.Array        # (cache_lines,) int32, -1 = invalid
-    cycles: jax.Array      # () int32 (lockstep-round total)
-    stats: jax.Array       # (4,) int64: instrs, mem_ops, hits, misses
-    step: jax.Array        # () int32
-
-
-def _mulh32(a, b):
-    """Signed 32x32 -> high 32 bits with pure int32 ops (no int64 needed).
-    Standard decomposition a = a_hi*2^16 + a_lo (a_lo unsigned); all
-    partial products fit int32."""
-    a_lo = a & 0xFFFF
-    a_hi = a >> 16                      # arithmetic
-    b_lo = b & 0xFFFF
-    b_hi = b >> 16
-    t1 = (a_lo * b_lo).astype(jnp.uint32) >> 16
-    t2 = a_hi * b_lo + t1.astype(jnp.int32)
-    t3 = a_lo * b_hi + (t2 & 0xFFFF)
-    return a_hi * b_hi + (t2 >> 16) + (t3 >> 16)
-
-
-def exec_alu(op, a, b, imm, pc_min):
-    """Vectorized ALU for one instruction per wavefront.
-
-    op: (W, 1) int32; a, b: (W, L) int32 source values; imm: (W, 1).
-    Returns (result (W,L), pc_target (W,1), is_store_val).
-    This is the PE datapath the Pallas kernel mirrors."""
-    sh = jnp.clip(b, 0, 31)
-    shi = jnp.clip(imm, 0, 31)
-    au = a.astype(jnp.uint32)
-    b_safe = jnp.where(b == 0, 1, b)
-    cases = [
-        (isa.ADD, a + b), (isa.SUB, a - b), (isa.MUL, a * b),
-        (isa.MULH, _mulh32(a, b)),
-        (isa.DIV, jnp.where(b == 0, 0, a // b_safe)),
-        (isa.REM, jnp.where(b == 0, 0, a % b_safe)),
-        (isa.AND, a & b), (isa.OR, a | b), (isa.XOR, a ^ b),
-        (isa.SLL, a << sh), (isa.SRL, (au >> sh.astype(jnp.uint32))
-                             .astype(jnp.int32)), (isa.SRA, a >> sh),
-        (isa.SLT, (a < b).astype(jnp.int32)),
-        (isa.ADDI, a + imm), (isa.ANDI, a & imm), (isa.ORI, a | imm),
-        (isa.XORI, a ^ imm),
-        (isa.SLLI, a << shi), (isa.SRLI, (au >> shi.astype(jnp.uint32))
-                               .astype(jnp.int32)), (isa.SRAI, a >> shi),
-        (isa.SLTI, (a < imm).astype(jnp.int32)),
-        (isa.LUI, imm << 12),
-    ]
-    result = jnp.zeros_like(a)
-    for code, val in cases:
-        result = jnp.where(op == code, val, result)
-    return result
-
-
-def _branch_taken(op, a, b):
-    taken = jnp.zeros_like(a, dtype=bool)
-    taken = jnp.where(op == isa.BEQ, a == b, taken)
-    taken = jnp.where(op == isa.BNE, a != b, taken)
-    taken = jnp.where(op == isa.BLT, a < b, taken)
-    taken = jnp.where(op == isa.BGE, a >= b, taken)
-    return taken
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "n_items", "prog_len"))
-def _run(prog, mem0, cfg: GGPUConfig, n_items: int, prog_len: int):
-    L = cfg.wavefront
-    W = (n_items + L - 1) // L
-    n_cus = cfg.n_cus
-    cu_of_w = jnp.arange(W, dtype=jnp.int32) % n_cus
-    gid = (jnp.arange(W)[:, None] * L + jnp.arange(L)[None, :]).astype(jnp.int32)
-    lane_valid = gid < n_items
-
-    line_shift = int(np.log2(cfg.line_words))
-    is_branch = jnp.asarray(isa.IS_BRANCH)
-    is_mem = jnp.asarray(isa.IS_MEM)
-    gpu_extra = jnp.asarray(
-        isa.SCALAR_EXTRA if cfg.pes_per_cu == 1 else isa.GPU_EXTRA)
-
-    st = MachineState(
-        pc=jnp.zeros((W, L), jnp.int32),
-        regs=jnp.zeros((W, L, isa.N_REGS), jnp.int32),
-        done=~lane_valid,
-        mem=jnp.concatenate([mem0, jnp.zeros((1,), jnp.int32)]),
-        tags=jnp.full((cfg.cache_lines,), -1, jnp.int32),
-        cycles=jnp.zeros((), jnp.int32),
-        stats=jnp.zeros((4,), jnp.int32),
-        step=jnp.zeros((), jnp.int32),
-    )
-    msize = mem0.shape[0]
-
-    def cond(s: MachineState):
-        return (~jnp.all(s.done)) & (s.step < cfg.max_steps)
-
-    def body(s: MachineState):
-        active = ~s.done                                     # (W, L)
-        live = jnp.any(active, axis=1)                       # (W,)
-        # FGPU holds at most `max_wf_per_cu` resident wavefronts per CU:
-        # rank each live wavefront within its CU (w = i*n_cus + cu order)
-        # and run only the first 8. This is why 8 CUs have an 8x larger
-        # concurrent working set — and why the paper's xcorr THRASHES.
-        live_mat = live.reshape(-1, n_cus)                   # (W/n_cus, n_cus)
-        rank = jnp.cumsum(live_mat.astype(jnp.int32), axis=0) - 1
-        resident_mat = live_mat & (rank < cfg.max_wf_per_cu)
-        resident = resident_mat.reshape(-1)                  # (W,)
-        active = active & resident[:, None]
-        wf_live = resident
-        pc_min = jnp.min(jnp.where(active, s.pc, prog_len), axis=1,
-                         keepdims=True)                      # (W, 1)
-        instr = prog[jnp.clip(pc_min[:, 0], 0, prog_len - 1)]  # (W, 5)
-        op = instr[:, 0:1]
-        rd, rs, rt = instr[:, 1], instr[:, 2], instr[:, 3]
-        imm = instr[:, 4:5]
-        exec_m = active & (s.pc == pc_min)                   # (W, L)
-
-        a = jnp.take_along_axis(s.regs, rs[:, None, None], axis=2)[:, :, 0]
-        b = jnp.take_along_axis(s.regs, rt[:, None, None], axis=2)[:, :, 0]
-
-        res = exec_alu(op, a, b, imm, pc_min)
-        res = jnp.where(op == isa.TID, gid, res)
-        res = jnp.where(op == isa.NITEMS, n_items, res)
-        res = jnp.where(op == isa.WGID, gid // L, res)
-
-        # --- memory ---
-        addr = jnp.clip(a + imm, 0, msize - 1)
-        is_load = op == isa.LW
-        is_store = op == isa.SW
-        mem_mask = exec_m & (is_load | is_store)
-        loaded = s.mem[jnp.where(mem_mask, addr, msize)]
-        res = jnp.where(is_load, loaded, res)
-        # masked store: inactive lanes write the sink slot (index msize)
-        waddr = jnp.where(exec_m & is_store, addr, msize)
-        mem = s.mem.at[waddr].set(b)
-
-        # --- cache model (cycle accounting only) ---
-        line = (addr >> line_shift) % cfg.cache_lines
-        tag = addr >> line_shift
-        line_m = jnp.where(mem_mask, line, 0)
-        hit = (s.tags[line_m] == tag) & mem_mask
-        miss = mem_mask & ~hit
-        tags = s.tags.at[jnp.where(miss, line, cfg.cache_lines)].set(
-            tag, mode="drop")
-        # Port traffic: lanes of one wavefront coalesce into per-line
-        # requests, but DISTINCT wavefronts issue distinct requests even for
-        # the same line -> count per-wavefront unique hit lines. DRAM fills
-        # coalesce globally (MSHR): count globally-unique missed lines.
-        w_ix = jnp.broadcast_to(jnp.arange(W)[:, None], line.shape)
-        t_hit = jnp.zeros((W, cfg.cache_lines + 1), jnp.int32).at[
-            w_ix, jnp.where(hit, line, cfg.cache_lines)].max(1, mode="drop")
-        hit_lines = jnp.sum(t_hit[:, :-1])
-        t_miss = jnp.zeros((cfg.cache_lines + 1,), jnp.int32).at[
-            jnp.where(miss, line, cfg.cache_lines)].max(1, mode="drop")
-        miss_lines = jnp.sum(t_miss[:-1])
-
-        # --- writeback ---
-        do_wr = exec_m & (rd[:, None] != 0) & (~is_branch[op[:, 0]][:, None]) \
-            & (~is_store)
-        regs = jnp.where(
-            do_wr[:, :, None] & (jnp.arange(isa.N_REGS) == rd[:, None, None]),
-            res[:, :, None], s.regs)
-
-        # --- control flow ---
-        taken = _branch_taken(op, a, b) & exec_m
-        pc_next = jnp.where(taken, imm, pc_min + 1)
-        pc = jnp.where(exec_m, pc_next, s.pc)
-        done = s.done | (exec_m & (op == isa.HALT))
-
-        # --- cycles: lockstep-round model ---
-        # One "round" = every live wavefront issues one instruction. Round
-        # time = max(slowest CU's issue work, shared cache service time):
-        # CU-side: issue cycles (+ non-pipelined op extras) summed over its
-        #   resident wavefronts, plus any un-hidden dependent-miss latency
-        #   (hidden when other wavefronts can issue — the SIMT trick);
-        # memory-side: unique hit lines stream through `ports` movers,
-        #   unique missed lines pay the DRAM fill bandwidth. This shared
-        #   term is what saturates copy/vec_mul and degrades xcorr at 8 CUs.
-        wf_exec = jnp.any(exec_m, axis=1)                    # (W,)
-        base = (cfg.issue_cycles + gpu_extra[op[:, 0]]) \
-            * wf_exec.astype(jnp.int32)
-        cu_issue = jnp.zeros((n_cus,), jnp.int32).at[cu_of_w].add(base)
-        wf_resident = jnp.zeros((n_cus,), jnp.int32).at[cu_of_w].add(
-            wf_live.astype(jnp.int32))
-        cu_time = cu_issue
-        # hits stream through the multi-port cache concurrently with
-        # issue; misses serialize on the single AXI/DRAM path and cannot
-        # be hidden once every resident wavefront is stalled on them
-        hit_service = (hit_lines + cfg.ports - 1) // cfg.ports
-        round_t = (jnp.maximum(jnp.max(cu_time), hit_service)
-                   + miss_lines * cfg.dram_line_cycles)
-        cycles = s.cycles + round_t.astype(jnp.int32)
-
-        stats = s.stats + jnp.array([
-            jnp.sum(wf_exec), jnp.sum(mem_mask), jnp.sum(hit), jnp.sum(miss),
-        ], jnp.int32)
-        return MachineState(pc, regs, done, mem, tags, cycles, stats,
-                            s.step + 1)
-
-    final = jax.lax.while_loop(cond, body, st)
-    return final
-
-
-def run_kernel(prog: np.ndarray, mem0: np.ndarray, n_items: int,
-               cfg: GGPUConfig):
-    """Execute a kernel. Returns (mem_final, info dict)."""
-    final = _run(jnp.asarray(prog), jnp.asarray(mem0, jnp.int32), cfg,
-                 int(n_items), int(prog.shape[0]))
-    cycles = int(np.asarray(final.cycles))
-    stats = np.asarray(final.stats)
-    if not bool(np.asarray(final.done).all()):
-        raise RuntimeError("kernel hit max_steps without halting")
-    return np.asarray(final.mem)[:-1], {
-        "cycles": cycles,
-        "instrs": int(stats[0]),
-        "mem_ops": int(stats[1]),
-        "hits": int(stats[2]),
-        "misses": int(stats[3]),
-        "steps": int(np.asarray(final.step)),
-        "time_us": float(cycles / cfg.freq_mhz),
-    }
+__all__ = [
+    "GGPUConfig", "ScalarConfig", "MachineState",
+    "run_kernel", "run_kernel_batch", "run_kernel_cohort", "exec_alu",
+]

@@ -1,0 +1,12 @@
+"""Version compatibility for the Pallas TPU toolchain.
+
+jax renamed ``TPUCompilerParams`` -> ``CompilerParams`` in newer releases;
+every kernel module imports the resolved class from here so the pin can
+move in one place.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -5,8 +5,9 @@ classic SIMD select-tree: every lane computes all candidate ALU results and
 the per-wavefront opcode selects one. On TPU this maps onto the VPU: lanes
 tile the (wavefront, lane) plane in VMEM blocks; the opcode/immediate
 stream sits in SMEM-like narrow blocks. This is the hot inner loop of the
-cycle simulator (`repro.ggpu.machine.exec_alu` is the jnp twin used on CPU
-and as the oracle).
+cycle simulator (`repro.ggpu.engine.alu.select_alu` is the shared datapath:
+the same case table traces here inside the Pallas kernel and inside the
+engine's `lax.while_loop` stepper, so the two can never drift).
 
 Integer division (the paper's weak spot) is implemented as a bounded
 Newton/long-division loop to stay VPU-friendly — mirroring FGPU's
@@ -21,21 +22,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.ggpu import isa
+from repro.kernels._compat import COMPILER_PARAMS as _COMPILER_PARAMS
 
-
-def _mulh32(a, b):
-    """Signed 32x32 -> high 32 bits with pure int32 ops (no int64 needed).
-    Standard decomposition a = a_hi*2^16 + a_lo (a_lo unsigned); all
-    partial products fit int32."""
-    a_lo = a & 0xFFFF
-    a_hi = a >> 16                      # arithmetic
-    b_lo = b & 0xFFFF
-    b_hi = b >> 16
-    t1 = (a_lo * b_lo).astype(jnp.uint32) >> 16
-    t2 = a_hi * b_lo + t1.astype(jnp.int32)
-    t3 = a_lo * b_hi + (t2 & 0xFFFF)
-    return a_hi * b_hi + (t2 >> 16) + (t3 >> 16)
+from repro.ggpu.engine.alu import select_alu
 
 
 def _pe_kernel(op_ref, imm_ref, a_ref, b_ref, out_ref):
@@ -43,30 +32,7 @@ def _pe_kernel(op_ref, imm_ref, a_ref, b_ref, out_ref):
     imm = imm_ref[...]
     a = a_ref[...]                                         # (bw, L) int32
     b = b_ref[...]
-    sh = jnp.clip(b, 0, 31)
-    shi = jnp.clip(imm, 0, 31)
-    au = a.astype(jnp.uint32)
-    b_safe = jnp.where(b == 0, 1, b)
-    cases = [
-        (isa.ADD, a + b), (isa.SUB, a - b), (isa.MUL, a * b),
-        (isa.MULH, _mulh32(a, b)),
-        (isa.DIV, jnp.where(b == 0, 0, a // b_safe)),
-        (isa.REM, jnp.where(b == 0, 0, a % b_safe)),
-        (isa.AND, a & b), (isa.OR, a | b), (isa.XOR, a ^ b),
-        (isa.SLL, a << sh),
-        (isa.SRL, (au >> sh.astype(jnp.uint32)).astype(jnp.int32)),
-        (isa.SRA, a >> sh),
-        (isa.SLT, (a < b).astype(jnp.int32)),
-        (isa.ADDI, a + imm), (isa.ANDI, a & imm), (isa.ORI, a | imm),
-        (isa.XORI, a ^ imm), (isa.SLLI, a << shi),
-        (isa.SRLI, (au >> shi.astype(jnp.uint32)).astype(jnp.int32)),
-        (isa.SRAI, a >> shi), (isa.SLTI, (a < imm).astype(jnp.int32)),
-        (isa.LUI, jnp.broadcast_to(imm << 12, a.shape)),
-    ]
-    out = jnp.zeros_like(a)
-    for code, val in cases:
-        out = jnp.where(op == code, val, out)
-    out_ref[...] = out
+    out_ref[...] = select_alu(op, a, b, imm)
 
 
 @functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
@@ -94,7 +60,7 @@ def pe_execute(op, imm, a, b, *, block_w: int = 8, interpret: bool = True):
         ],
         out_specs=pl.BlockSpec((bw, l), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((wp, l), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(op, imm, a, b)

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import COMPILER_PARAMS as _COMPILER_PARAMS
+
 
 def _rglru_kernel(a_ref, b_ref, h0_ref, h_ref, hf_ref, carry, *, seq: int,
                   chunk: int):
@@ -80,7 +82,7 @@ def rglru_scan(a, b, h0, *, block_d: int = 128, chunk: int = 128,
             jax.ShapeDtypeStruct((bsz, dp), a.dtype),
         ],
         scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(a, b, h0)

@@ -1,20 +1,30 @@
 """Batched serving engine: prefill + decode with slot-based continuous
-batching.
+batching, plus the G-GPU kernel ``LaunchQueue``.
 
-A fixed decode batch of ``slots``; finished sequences free their slot and
-the next queued request is prefilled into it (its KV written into the
-shared cache at the slot's batch row). Greedy or temperature sampling.
+LLM side: a fixed decode batch of ``slots``; finished sequences free their
+slot and the next queued request is prefilled into it (its KV written into
+the shared cache at the slot's batch row). Greedy or temperature sampling.
 This is the serve-side driver the decode dry-run cells lower.
+
+G-GPU side: ``LaunchQueue`` batches simulator kernel launches the same way
+the LLM engine batches decode requests — N same-shape (program, mem-image)
+pairs are padded to a common envelope and ``jax.vmap``-ed over one compiled
+stepper (``repro.ggpu.engine.run_kernel_batch``), so a traffic burst of
+launches costs one dispatch instead of N.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ggpu.engine import GGPUConfig, KernelLaunchError
+from repro.ggpu.engine import run_kernel as _ggpu_run_kernel
+from repro.ggpu.engine import run_kernel_batch as _ggpu_run_kernel_batch
+from repro.ggpu.engine import run_kernel_cohort as _ggpu_run_kernel_cohort
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.models.steps import make_decode_step
@@ -80,3 +90,138 @@ class Engine:
             for r, i in enumerate(wave):
                 results[i] = toks[r]
         return results  # type: ignore
+
+
+@dataclasses.dataclass
+class KernelLaunch:
+    """One queued G-GPU kernel launch."""
+    prog: np.ndarray
+    mem0: np.ndarray
+    n_items: int
+    tag: str = ""
+
+
+class LaunchQueue:
+    """Multi-kernel launch queue for the G-GPU simulator.
+
+    ``submit`` enqueues a (program, mem-image, n_items) launch and returns
+    a ticket; ``flush`` executes everything queued and returns results in
+    submission order. Launches of the *same kernel* (identical program,
+    item count, and memory shape — the serving-traffic common case) are
+    folded into one **cohort** stepper call, which amortizes the
+    simulator's per-round fixed costs across the whole group; remaining
+    launches with a matching wavefront count share one vmapped batch, and
+    odd shapes fall back to the single-launch path. Groups are chunked at
+    ``max_batch``. All three paths are bit-exact per launch.
+    """
+
+    def __init__(self, cfg: GGPUConfig, max_batch: int = 64):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self._pending: List[KernelLaunch] = []
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def submit(self, prog: np.ndarray, mem0: np.ndarray, n_items: int,
+               tag: str = "") -> int:
+        """Queue a launch; returns its ticket (index into flush() order)."""
+        self._pending.append(
+            KernelLaunch(np.asarray(prog, np.int32),
+                         np.asarray(mem0, np.int32), int(n_items), tag))
+        return len(self._pending) - 1
+
+    def discard(self, ticket: int) -> KernelLaunch:
+        """Remove and return a pending launch by its current ticket (the
+        recovery path after a failed flush: drop the poisoned launch,
+        flush the rest). Later tickets shift down by one."""
+        return self._pending.pop(ticket)
+
+    def _wavefronts(self, n_items: int) -> int:
+        L = self.cfg.wavefront
+        return (n_items + L - 1) // L
+
+    def flush(self) -> List[Tuple[np.ndarray, dict]]:
+        """Run every queued launch; results come back in submission order
+        with the queue's grouping recorded in ``info['batch_size']`` and
+        the submission ``tag`` (if any) in ``info['tag']``. If any launch
+        fails (e.g. hits ``max_steps``), the whole flush raises a
+        ``KernelLaunchError`` naming the poisoned launch's ticket and tag,
+        and every launch is restored to the queue so the caller can
+        ``discard`` that ticket and retry the rest."""
+        pending, self._pending = self._pending, []
+        try:
+            return self._run_all(pending)
+        except BaseException:
+            self._pending = pending + self._pending
+            raise
+
+    def _run_all(self, pending: List[KernelLaunch]
+                 ) -> List[Tuple[np.ndarray, dict]]:
+        cohorts: Dict[Tuple, List[int]] = {}
+        for i, kl in enumerate(pending):
+            key = (kl.prog.tobytes(), kl.n_items, kl.mem0.shape[0])
+            cohorts.setdefault(key, []).append(i)
+        results: List[Optional[Tuple[np.ndarray, dict]]] = \
+            [None] * len(pending)
+
+        def blame(chunk, exc: KernelLaunchError):
+            """Re-raise a chunk failure naming the submission ticket."""
+            ticket = chunk[exc.index]
+            tag = pending[ticket].tag
+            raise KernelLaunchError(
+                f"launch ticket {ticket}" + (f" (tag {tag!r})" if tag
+                                             else "")
+                + f" hit max_steps without halting; discard({ticket}) "
+                f"and flush() again to retry the rest", ticket) from exc
+
+        stragglers: List[int] = []
+        for members in cohorts.values():
+            if len(members) == 1:
+                stragglers.append(members[0])
+                continue
+            for lo in range(0, len(members), self.max_batch):
+                chunk = members[lo:lo + self.max_batch]
+                i0 = chunk[0]
+                try:
+                    outs = _ggpu_run_kernel_cohort(
+                        pending[i0].prog, [pending[i].mem0 for i in chunk],
+                        pending[i0].n_items, self.cfg)
+                except KernelLaunchError as exc:
+                    blame(chunk, exc)
+                for i, out in zip(chunk, outs):
+                    results[i] = out
+        # stragglers: vmap-batch per wavefront bucket, singles otherwise
+        buckets: Dict[int, List[int]] = {}
+        for i in sorted(stragglers):
+            buckets.setdefault(self._wavefronts(pending[i].n_items),
+                               []).append(i)
+        for members in buckets.values():
+            for lo in range(0, len(members), self.max_batch):
+                chunk = members[lo:lo + self.max_batch]
+                if len(chunk) == 1:
+                    i = chunk[0]
+                    try:
+                        mem, info = _ggpu_run_kernel(
+                            pending[i].prog, pending[i].mem0,
+                            pending[i].n_items, self.cfg)
+                    except KernelLaunchError as exc:
+                        blame(chunk, exc)
+                    info["batch_size"] = 1
+                    results[i] = (mem, info)
+                    continue
+                try:
+                    outs = _ggpu_run_kernel_batch(
+                        [pending[i].prog for i in chunk],
+                        [pending[i].mem0 for i in chunk],
+                        [pending[i].n_items for i in chunk], self.cfg)
+                except KernelLaunchError as exc:
+                    blame(chunk, exc)
+                for i, out in zip(chunk, outs):
+                    results[i] = out
+        for i, kl in enumerate(pending):
+            if kl.tag:
+                results[i][1]["tag"] = kl.tag
+        return results  # type: ignore[return-value]

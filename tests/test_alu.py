@@ -1,0 +1,108 @@
+"""exec_alu edge cases against a numpy int64-then-wrap-to-int32 reference:
+MULH/DIV/REM with negative (and INT_MIN) operands, shift-amount clipping,
+and LUI. Parametrized — no hypothesis needed."""
+import numpy as np
+import pytest
+
+from repro.ggpu import isa
+from repro.ggpu.engine.alu import exec_alu, select_alu
+
+INT_MIN = -2**31
+SIGNED_PAIRS = [
+    (INT_MIN, -1), (INT_MIN, 1), (INT_MIN, INT_MIN),
+    (-7, 3), (7, -3), (-7, -3), (7, 3),
+    (5, 0), (-5, 0), (0, -3), (2**31 - 1, 2**31 - 1), (-1, -1),
+]
+SHIFT_PAIRS = [(1, 0), (1, 5), (1, 31), (1, 32), (-8, 40), (INT_MIN, 100),
+               (123, -1), (-1, 31)]
+
+
+def _run(opcode, pairs, imm=0):
+    a = np.array([p[0] for p in pairs], np.int32)[None, :]
+    b = np.array([p[1] for p in pairs], np.int32)[None, :]
+    op = np.full((1, 1), opcode, np.int32)
+    immv = np.full((1, 1), imm, np.int32)
+    return np.asarray(exec_alu(op, a, b, immv))[0]
+
+
+def _i64(pairs):
+    return (np.array([p[0] for p in pairs], np.int64),
+            np.array([p[1] for p in pairs], np.int64))
+
+
+def _wrap32(x64):
+    return x64.astype(np.uint64).astype(np.uint32).astype(np.int32)
+
+
+def test_mulh_signed():
+    """MULH = high 32 bits of the exact signed 64-bit product."""
+    a, b = _i64(SIGNED_PAIRS)
+    np.testing.assert_array_equal(_run(isa.MULH, SIGNED_PAIRS),
+                                  ((a * b) >> 32).astype(np.int32))
+
+
+def test_div_floor_semantics():
+    """DIV is floor division (jnp/python semantics, not C truncation);
+    divide-by-zero yields 0; INT_MIN/-1 wraps to INT_MIN."""
+    a, b = _i64(SIGNED_PAIRS)
+    ref = _wrap32(np.where(b == 0, 0,
+                           np.floor_divide(a, np.where(b == 0, 1, b))))
+    np.testing.assert_array_equal(_run(isa.DIV, SIGNED_PAIRS), ref)
+
+
+def test_rem_sign_follows_divisor():
+    """REM pairs with floor DIV: result sign follows the divisor
+    (python % semantics); x rem 0 = 0."""
+    a, b = _i64(SIGNED_PAIRS)
+    ref = _wrap32(np.where(b == 0, 0, np.mod(a, np.where(b == 0, 1, b))))
+    np.testing.assert_array_equal(_run(isa.REM, SIGNED_PAIRS), ref)
+    # invariant: a == DIV*b + REM wherever b != 0 (mod 2^32)
+    q = _run(isa.DIV, SIGNED_PAIRS).astype(np.int64)
+    r = _run(isa.REM, SIGNED_PAIRS).astype(np.int64)
+    nz = b != 0
+    np.testing.assert_array_equal(_wrap32((q * b + r))[nz],
+                                  _wrap32(a)[nz])
+
+
+@pytest.mark.parametrize("opcode", [isa.SLL, isa.SRL, isa.SRA])
+def test_shift_amount_clipping(opcode):
+    """Shift amounts clip to [0, 31]: negative -> 0, >=32 -> 31."""
+    a, b = _i64(SHIFT_PAIRS)
+    sh = np.clip(b, 0, 31)
+    if opcode == isa.SLL:
+        ref = _wrap32(a << sh)
+    elif opcode == isa.SRA:
+        ref = (a.astype(np.int32) >> sh.astype(np.int32)).astype(np.int32)
+    else:                                   # SRL: logical on uint32
+        ref = (a.astype(np.int64).astype(np.uint64).astype(np.uint32)
+               >> sh.astype(np.uint32)).astype(np.int32)
+    np.testing.assert_array_equal(_run(opcode, SHIFT_PAIRS), ref)
+
+
+@pytest.mark.parametrize("opcode,iop", [(isa.SLL, isa.SLLI),
+                                        (isa.SRL, isa.SRLI),
+                                        (isa.SRA, isa.SRAI)])
+@pytest.mark.parametrize("amount", [0, 7, 31, 32, 63, -2])
+def test_immediate_shifts_match_register_shifts(opcode, iop, amount):
+    vals = [(v, amount) for v, _ in SHIFT_PAIRS]
+    np.testing.assert_array_equal(_run(iop, vals, imm=amount),
+                                  _run(opcode, vals))
+
+
+@pytest.mark.parametrize("imm", [0, 1, -1, 2047, -2048, 0x7FFFF, -0x80000])
+def test_lui(imm):
+    pairs = [(0, 0), (99, -7)]              # operands must be ignored
+    ref = _wrap32(np.full(len(pairs), np.int64(imm) << 12))
+    np.testing.assert_array_equal(_run(isa.LUI, pairs, imm=imm), ref)
+
+
+def test_pruned_select_tree_matches_full():
+    """Decode specialization: pruning the select tree to the present ops
+    is result-neutral."""
+    a = np.array([p[0] for p in SIGNED_PAIRS], np.int32)[None, :]
+    b = np.array([p[1] for p in SIGNED_PAIRS], np.int32)[None, :]
+    op = np.full((1, 1), isa.MULH, np.int32)
+    imm = np.zeros((1, 1), np.int32)
+    full = select_alu(op, a, b, imm, None)
+    pruned = select_alu(op, a, b, imm, frozenset({isa.MULH}))
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(pruned))

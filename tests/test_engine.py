@@ -1,0 +1,243 @@
+"""Execution-engine invariants: fused dispatch and batched launches are
+bit-exact vs the legacy single-launch path; the pluggable memory systems
+preserve functional results; the LaunchQueue groups and orders correctly."""
+import numpy as np
+import pytest
+
+from repro.ggpu import programs
+from repro.ggpu.engine import (MEMSYS_REGISTRY, GGPUConfig, ScalarConfig,
+                               get_memsys, run_kernel, run_kernel_batch,
+                               run_kernel_cohort)
+from repro.ggpu.isa import Assembler
+from repro.serve.engine import LaunchQueue
+
+
+def _divergent_prog(n):
+    a = Assembler()
+    a.tid(1).andi(2, 1, 1).beq(2, 0, "even")
+    a.mul(3, 1, 1).sw(3, 1, n).beq(0, 0, "end")
+    a.label("even").slli(3, 1, 1).sw(3, 1, n)
+    a.label("end").halt()
+    return a.assemble()
+
+
+def test_fused_dispatch_bit_exact():
+    """fuse=1 (legacy, memsys every round) and fuse=8 (fused fast path)
+    agree on results, cycles, stats, and step count."""
+    b = programs._xcorr(32, 256)
+    runs = {}
+    for fuse in (1, 8):
+        cfg = GGPUConfig(n_cus=2, fuse=fuse)
+        runs[fuse] = run_kernel(b.gpu_prog, b.gpu_mem, b.gpu_items, cfg)
+    mem1, i1 = runs[1]
+    mem8, i8 = runs[8]
+    np.testing.assert_array_equal(mem1, mem8)
+    for k in ("cycles", "instrs", "mem_ops", "hits", "misses", "steps"):
+        assert i1[k] == i8[k], k
+
+
+def test_batch_matches_single_mixed_shapes():
+    """A batch of different programs/memory sizes/item counts reproduces
+    each single launch bit-exactly (results AND cycle counts)."""
+    cfg = GGPUConfig(n_cus=2)
+    c = programs._copy(64, 1024)
+    n = 128
+    launches = [
+        (c.gpu_prog, c.gpu_mem, c.gpu_items),
+        (_divergent_prog(n), np.zeros(2 * n, np.int32), n),
+    ]
+    singles = [run_kernel(p, m, k, cfg) for p, m, k in launches]
+    batch = run_kernel_batch([p for p, _, _ in launches],
+                             [m for _, m, _ in launches],
+                             [k for _, _, k in launches], cfg)
+    for (ms, is_), (mb, ib) in zip(singles, batch):
+        np.testing.assert_array_equal(ms, mb)
+        for key in ("cycles", "instrs", "mem_ops", "hits", "misses",
+                    "steps"):
+            assert is_[key] == ib[key], key
+
+
+def test_legacy_reference_bit_exact():
+    """The seed-faithful legacy stepper and the optimized engine agree on
+    everything observable."""
+    b = programs._xcorr(32, 256)
+    cfg = GGPUConfig(n_cus=2)
+    mem_n, i_n = run_kernel(b.gpu_prog, b.gpu_mem, b.gpu_items, cfg)
+    mem_l, i_l = run_kernel(b.gpu_prog, b.gpu_mem, b.gpu_items, cfg,
+                            legacy=True)
+    np.testing.assert_array_equal(mem_n, mem_l)
+    for k in ("cycles", "instrs", "mem_ops", "hits", "misses", "steps"):
+        assert i_n[k] == i_l[k], k
+
+
+def test_cohort_matches_single():
+    """A same-kernel cohort (folded into the wavefront axis) reproduces
+    each single launch bit-exactly, including cycles."""
+    b = programs._xcorr(32, 256)
+    cfg = GGPUConfig(n_cus=2)
+    rng = np.random.default_rng(11)
+    mems = [np.concatenate([rng.integers(-20, 20, 512).astype(np.int32),
+                            np.zeros(256, np.int32)]) for _ in range(3)]
+    singles = [run_kernel(b.gpu_prog, m, b.gpu_items, cfg) for m in mems]
+    cohort = run_kernel_cohort(b.gpu_prog, mems, b.gpu_items, cfg)
+    for (ms, is_), (mc, ic) in zip(singles, cohort):
+        np.testing.assert_array_equal(ms, mc)
+        for key in ("cycles", "instrs", "mem_ops", "hits", "misses",
+                    "steps"):
+            assert is_[key] == ic[key], key
+        assert ic["batch_size"] == 3
+
+
+def test_cohort_rejects_mixed_mem_shapes():
+    b = programs._copy(64, 256)
+    with pytest.raises(ValueError):
+        run_kernel_cohort(b.gpu_prog,
+                          [b.gpu_mem, np.zeros(7, np.int32)],
+                          b.gpu_items, GGPUConfig())
+
+
+def test_batch_clips_at_each_launchs_own_memory_size():
+    """In a mixed-size batch, an out-of-range address must clip at the
+    launch's own memory boundary (reading its last word), not at the
+    padded batch envelope (which would read padding zeros)."""
+    n = 64
+    a = Assembler()
+    a.tid(1).li(2, 5000).lw(3, 2, 0).sw(3, 1, n).halt()   # read way OOB
+    prog = a.assemble()
+    mem_small = np.arange(2 * n, dtype=np.int32)          # last word: 127
+    big = programs._copy(64, 1024)                        # forces padding
+    single = run_kernel(prog, mem_small, n, GGPUConfig())
+    batch = run_kernel_batch([prog, big.gpu_prog],
+                             [mem_small, big.gpu_mem],
+                             [n, big.gpu_items], GGPUConfig())
+    np.testing.assert_array_equal(single[0], batch[0][0])
+    assert batch[0][0][n] == 2 * n - 1                    # clipped in-image
+    assert single[1]["cycles"] == batch[0][1]["cycles"]
+
+
+def test_batch_empty_and_single():
+    assert run_kernel_batch([], [], [], GGPUConfig()) == []
+    b = programs._copy(64, 256)
+    (mem_b, info_b), = run_kernel_batch([b.gpu_prog], [b.gpu_mem],
+                                        [b.gpu_items], GGPUConfig())
+    mem_s, info_s = run_kernel(b.gpu_prog, b.gpu_mem, b.gpu_items,
+                               GGPUConfig())
+    np.testing.assert_array_equal(mem_b, mem_s)
+    assert info_b["cycles"] == info_s["cycles"]
+
+
+@pytest.mark.parametrize("memsys", sorted(MEMSYS_REGISTRY))
+def test_memsys_functional_results_identical(memsys):
+    """The memory system only changes cycle accounting — functional results
+    are identical across organizations."""
+    b = programs._xcorr(32, 256)
+    cfg = GGPUConfig(n_cus=2, memsys=memsys)
+    mem, info = run_kernel(b.gpu_prog, b.gpu_mem, b.gpu_items, cfg)
+    np.testing.assert_array_equal(mem[b.gpu_out], b.ref(b.gpu_mem, 256))
+    assert info["cycles"] > 0
+    assert info["memsys"] == memsys
+
+
+def test_banked_1cu_equals_shared():
+    """With one CU and full-size banks the banked organization degenerates
+    to the shared cache: cycles must match exactly."""
+    b = programs._xcorr(32, 256)
+    _, shared = run_kernel(b.gpu_prog, b.gpu_mem, b.gpu_items,
+                           GGPUConfig(n_cus=1, memsys="shared"))
+    _, banked = run_kernel(b.gpu_prog, b.gpu_mem, b.gpu_items,
+                           GGPUConfig(n_cus=1, memsys="banked"))
+    for k in ("cycles", "hits", "misses"):
+        assert shared[k] == banked[k], k
+
+
+def test_banked_8cu_model_properties():
+    """At 8 CUs on a working set that fits every organization: banks fill
+    independently (no cross-CU MSHR coalescing), so the banked cache pays
+    at least the shared cache's compulsory misses — while hits split across
+    banks. The DSE sweep (table_memsys) reports which effect wins."""
+    b = programs._xcorr(32, 512)
+    _, shared = run_kernel(b.gpu_prog, b.gpu_mem, b.gpu_items,
+                           GGPUConfig(n_cus=8, memsys="shared"))
+    _, banked = run_kernel(b.gpu_prog, b.gpu_mem, b.gpu_items,
+                           GGPUConfig(n_cus=8, memsys="banked"))
+    assert banked["misses"] >= shared["misses"]
+    assert banked["hits"] + banked["misses"] == shared["hits"] + shared["misses"]
+    assert banked["cycles"] > 0
+
+
+def test_get_memsys_unknown_name():
+    with pytest.raises(KeyError):
+        get_memsys("l3-victim")
+
+
+def test_launch_queue_orders_and_groups():
+    """Tickets come back in submission order; same-wavefront launches share
+    one batch, odd shapes fall back to singletons."""
+    cfg = GGPUConfig(n_cus=2)
+    q = LaunchQueue(cfg)
+    c1 = programs._copy(64, 1024)       # W = 16
+    c2 = programs._copy(64, 256)        # W = 4
+    rng = np.random.default_rng(3)
+    mems = [np.concatenate([rng.integers(-50, 50, 1024).astype(np.int32),
+                            np.zeros(1024, np.int32)]) for _ in range(3)]
+    t0 = q.submit(c1.gpu_prog, mems[0], c1.gpu_items)
+    t1 = q.submit(c2.gpu_prog, c2.gpu_mem, c2.gpu_items)
+    t2 = q.submit(c1.gpu_prog, mems[1], c1.gpu_items)
+    t3 = q.submit(c1.gpu_prog, mems[2], c1.gpu_items)
+    assert [t0, t1, t2, t3] == [0, 1, 2, 3]
+    assert len(q) == 4
+    results = q.flush()
+    assert len(q) == 0 and len(results) == 4
+    for t, m in zip((t0, t2, t3), mems):
+        mem, info = results[t]
+        np.testing.assert_array_equal(mem[c1.gpu_out], m[:1024])
+        assert info["batch_size"] == 3          # grouped by wavefront count
+    mem, info = results[t1]
+    np.testing.assert_array_equal(mem[c2.gpu_out], c2.gpu_mem[:256])
+    assert info["batch_size"] == 1              # singleton fallback
+
+
+def test_launch_queue_restores_on_failure_and_surfaces_tags():
+    """A failed flush re-queues every launch (retryable after dropping the
+    bad request); submission tags come back in info['tag']."""
+    q = LaunchQueue(GGPUConfig(max_steps=50))
+    b = programs._copy(64, 256)
+    spin = Assembler()
+    spin.label("spin").beq(0, 0, "spin")        # never halts
+    q.submit(b.gpu_prog, b.gpu_mem, b.gpu_items, tag="good")
+    t_bad = q.submit(spin.assemble(), np.zeros(8, np.int32), 8,
+                     tag="spinner")
+    with pytest.raises(RuntimeError):
+        q.flush()
+    assert len(q) == 2                           # nothing lost
+    assert q.discard(t_bad).tag == "spinner"     # drop the poisoned launch
+    (_, info), = q.flush()                       # rest of the burst retries
+    assert info["tag"] == "good"
+
+
+def test_launch_queue_respects_max_batch():
+    cfg = GGPUConfig()
+    q = LaunchQueue(cfg, max_batch=2)
+    b = programs._copy(64, 256)
+    for _ in range(3):
+        q.submit(b.gpu_prog, b.gpu_mem, b.gpu_items)
+    results = q.flush()
+    assert [info["batch_size"] for _, info in results] == [2, 2, 1]
+
+
+def test_scalar_runs_on_engine():
+    """The scalar baseline flows through the same engine stages."""
+    b = programs._copy(64, 256)
+    mem, info = run_kernel(b.scalar_prog, b.scalar_mem, 1, ScalarConfig())
+    np.testing.assert_array_equal(mem[b.scalar_out],
+                                  b.ref(b.scalar_mem, b.scalar_n))
+    assert info["cycles"] > 0
+
+
+def test_planner_memsys_sweep():
+    from repro.core.planner import sweep_memsys
+    sweep = sweep_memsys(bench="xcorr", n_cus=(1,), sizes=(32, 128))
+    # defaults must track the engine registry (single source of truth)
+    assert set(sweep) == {(1, ms) for ms in MEMSYS_REGISTRY}
+    for info in sweep.values():
+        assert info["cycles"] > 0

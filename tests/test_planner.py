@@ -3,7 +3,7 @@ hypothesis properties of the memory-division strategy."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.planner import enumerate_versions, plan
 from repro.core.ppa import PAPER_TABLE1, GGPUVersion, baseline_inventory
