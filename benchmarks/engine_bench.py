@@ -9,8 +9,10 @@ Measures the execution-engine refactor itself, not the simulated machine:
     only simulator speed changes.
   * batched launches — N same-kernel launches sequentially vs one
     ``LaunchQueue`` flush (cohort-folded into a single stepper call).
-  * memsys sweep     — the planner's cache-organization DSE on the bench
-    the paper flags as cache-thrashing (xcorr at 8 CUs).
+  * memsys sweep     — the cache-organization DSE on the bench the paper
+    flags as cache-thrashing (xcorr at 8 CUs).
+  * dse sweep        — the unified analytic+cycle-accurate Pareto search
+    (``repro.dse``); writes the standardized ``BENCH_dse.json`` artifact.
 
 Warm timings exclude compilation (each variant runs once to compile).
 """
@@ -94,17 +96,57 @@ def bench_batched_launch(emit, n_launches: int = 8, n: int = 512) -> float:
     return t_seq / t_bat
 
 
-def bench_memsys_sweep(emit) -> None:
-    from repro.core.planner import sweep_memsys
+def bench_memsys_sweep(emit, sizes=(64, 1024)) -> None:
+    from repro.dse import sweep_memsys
 
-    sweep = sweep_memsys(bench="xcorr", n_cus=(1, 8), sizes=(64, 1024))
+    sweep = sweep_memsys(bench="xcorr", n_cus=(1, 8), sizes=sizes)
     for (c, ms), info in sweep.items():
         emit(f"engine/memsys/{ms}/{c}cu", info["time_us"],
              f"cycles={info['cycles']} hits={info['hits']} "
              f"misses={info['misses']}")
 
 
-def main(emit) -> None:
-    bench_fused_dispatch(emit)
-    bench_batched_launch(emit)
-    bench_memsys_sweep(emit)
+def bench_dse(emit, fast: bool = False, out: str = None) -> None:
+    """The unified DSE sweep: plan + cycle-evaluate a design grid, emit the
+    Pareto frontier, and write the standardized ``BENCH_dse.json`` artifact
+    (path overridable via ``GGPU_DSE_OUT``). ``fast`` runs the 2-point
+    smoke grid CI uses."""
+    import os
+
+    from repro import dse
+
+    out = out or os.environ.get("GGPU_DSE_OUT", "BENCH_dse.json")
+    if fast:
+        specs = dse.enumerate_specs(cus=(1,),
+                                    freq_targets=(500.0, 667.0))
+        ev = dse.Evaluator(benches=("xcorr",), sizes={"xcorr": (16, 128)})
+    else:
+        specs = dse.enumerate_specs(
+            cus=(1, 2, 4, 8), freq_targets=(500.0, 590.0, 667.0, 750.0),
+            memsys=("shared", "banked", "banked-iso"))
+        ev = dse.Evaluator(benches=("xcorr",), sizes={"xcorr": (64, 1024)})
+    res = dse.search(specs=specs, evaluator=ev)
+    for row in res.report():
+        emit(f"dse/point/{row['label']}", row["time_us"],
+             f"area={row['area_mm2']:.2f} "
+             f"analytic_us={row['analytic_time_us']:.1f} "
+             f"frontier={row['on_frontier']}")
+    emit("dse/frontier", 0.0,
+         " ".join(p.label() for p in res.frontier))
+    emit("dse/excluded_analytic", 0.0,
+         " ".join(p.label() for p in res.excluded_analytic) or "-")
+    reference = min(res.frontier, key=lambda p: p.time_us)
+    path = dse.write_artifact(out, reference, res)
+    emit("dse/artifact", 0.0, f"wrote {path} reference={reference.label()}")
+
+
+def main(emit, fast: bool = False) -> None:
+    if fast:
+        bench_fused_dispatch(emit, n_gpu=256)
+        bench_batched_launch(emit, n_launches=4, n=128)
+        bench_memsys_sweep(emit, sizes=(32, 256))
+    else:
+        bench_fused_dispatch(emit)
+        bench_batched_launch(emit)
+        bench_memsys_sweep(emit)
+    bench_dse(emit, fast=fast)

@@ -125,7 +125,7 @@ def table_memsys(emit, sizes=(64, 1024)):
     """Cache-organization sweep (the engine's third DSE axis): xcorr —
     the kernel whose 8-CU regression the paper attributes to shared-cache
     thrashing — under every registered memory system."""
-    from repro.core.planner import sweep_memsys
+    from repro.dse import sweep_memsys
     sweep = sweep_memsys(bench="xcorr", n_cus=(1, 2, 8), sizes=sizes)
     base = {c: sweep[(c, "shared")]["cycles"]
             for c in {c for c, _ in sweep}}

@@ -1,10 +1,14 @@
 """Benchmark harness: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Usage:
-  PYTHONPATH=src python -m benchmarks.run [--fast] [--engine]
-``--fast`` skips the O(n^2) cycle simulations (xcorr/parallel_sel).
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--engine] [--dse]
+``--fast`` skips the O(n^2) cycle simulations (xcorr/parallel_sel) and
+shrinks the engine/DSE grids.
 ``--engine`` runs only the simulator-engine micro-benchmarks (fused
-dispatch, batched launch queue, memory-system DSE sweep).
+dispatch, batched launch queue, memory-system DSE sweep, unified DSE
+search) and writes the ``BENCH_dse.json`` artifact.
+``--dse`` runs only the unified DSE Pareto sweep + artifact
+(``--dse --fast`` is the 2-point CI smoke).
 """
 from __future__ import annotations
 
@@ -18,9 +22,13 @@ def main() -> None:
         print(f"{name},{us:.3f},{derived}")
 
     print("name,us_per_call,derived")
+    if "--dse" in sys.argv:
+        from benchmarks import engine_bench
+        engine_bench.bench_dse(emit, fast=fast)
+        return
     if "--engine" in sys.argv:
         from benchmarks import engine_bench
-        engine_bench.main(emit)
+        engine_bench.main(emit, fast=fast)
         return
     from benchmarks import ggpu_tables, roofline_table
     ggpu_tables.table1_ppa(emit)

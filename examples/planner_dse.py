@@ -1,10 +1,15 @@
-"""GPUPlanner + MeshPlanner design-space exploration walkthrough.
+"""GPUPlanner + unified DSE + MeshPlanner walkthrough.
+
+Runs the paper's analytic map, then the unified ``repro.dse`` subsystem:
+a joint analytic+cycle-accurate Pareto search that shows which
+free-pipelining (analytic-only) picks the simulator rejects.
 
     PYTHONPATH=src python examples/planner_dse.py
 """
+from repro import dse
 from repro.configs import get_config
 from repro.core.meshplanner import plan as mesh_plan
-from repro.core.planner import enumerate_versions, plan, sweep_memsys
+from repro.core.planner import enumerate_versions, plan
 from repro.models.config import SHAPES
 
 
@@ -30,10 +35,25 @@ def main():
               f"power={r['total_w']:5.2f}W")
 
     print("\n=== third DSE axis: cache organization (xcorr, reduced) ===")
-    for (c, ms), info in sweep_memsys(bench="xcorr", n_cus=(1, 8),
-                                      sizes=(32, 256)).items():
+    for (c, ms), info in dse.sweep_memsys(bench="xcorr", n_cus=(1, 8),
+                                          sizes=(32, 256)).items():
         print(f"  {c}CU {ms:10s}: {info['cycles']:>7d} cycles "
               f"hits/misses={info['hits']}/{info['misses']}")
+
+    print("\n=== unified DSE: joint analytic+cycle-accurate Pareto search ===")
+    specs = dse.enumerate_specs(cus=(1, 2), freq_targets=(500.0, 667.0,
+                                                          750.0))
+    res = dse.search(specs=specs,
+                     evaluator=dse.Evaluator(benches=("xcorr",),
+                                             sizes={"xcorr": (16, 128)}))
+    for p, row in zip(res.points, res.report()):
+        mark = ("*" if row["on_frontier"] else
+                "x" if row["on_analytic_frontier"] else " ")
+        print(f"  {mark} {p.label():22s} time={p.time_us:7.1f}us "
+              f"(analytic {p.analytic_time_us:6.1f}us) "
+              f"area={p.area_mm2:5.2f}mm^2 energy={p.energy_uj:6.1f}uJ")
+    print("  * = Pareto frontier; x = analytic-only pick rejected by the")
+    print("      cycle model (free-pipelining assumption; see DESIGN.md)")
 
     print("\n=== MeshPlanner: same loop, TPU pod target ===")
     for arch, shape in [("qwen2-vl-72b", "train_4k"),

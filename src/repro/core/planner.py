@@ -15,16 +15,14 @@ Each iteration is logged — the log *is* the paper's "dynamic spreadsheet"
 map that tells a designer which memory to divide next before paying for
 synthesis. ``enumerate_versions`` reproduces the 12-version Table I sweep.
 
-Beyond the paper's two physical knobs (memory division, pipeline
-insertion), the execution engine exposes a third DSE axis the analytic map
-cannot see: the *cache organization* (``repro.ggpu.engine.memsys``).
-``sweep_memsys`` cycle-simulates a cache-pressure kernel under each
-organization — the architectural counterpart of Table I's sweep, motivated
-by the paper's 8-CU xcorr regression on the shared multi-port cache.
+This module is the *analytic* half of the DSE stack. The joint search —
+composing these versions with the cycle-accurate engine (cache
+organization, pipeline-latency feedback, Pareto ranking) — lives in
+``repro.dse``; ``sweep_memsys`` here is a thin deprecation shim over
+``repro.dse.sweep_memsys``.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -33,14 +31,6 @@ from repro.core.sram import MIN_WORDS, Macro, divided_path_delay
 
 MAX_PIPELINES = 4
 MAX_DIVISIONS_PER_MACRO = 6
-
-
-def _memsys_choices() -> Tuple[str, ...]:
-    # derived from the engine registry (the single source of truth) so a
-    # newly registered organization joins every sweep automatically; the
-    # import stays local to keep planner importable without jax
-    from repro.ggpu.engine.memsys import MEMSYS_REGISTRY
-    return tuple(sorted(MEMSYS_REGISTRY))
 
 
 @dataclass
@@ -143,29 +133,18 @@ def sweep_memsys(bench: str = "xcorr",
                  memsys: Optional[Sequence[str]] = None,
                  sizes: Optional[Tuple[int, int]] = (64, 1024),
                  **cfg_kw) -> Dict[Tuple[int, str], dict]:
-    """Cache-organization DSE: cycle-simulate ``bench`` on every
-    (CU count, memory system) point; returns ``{(n_cus, memsys): info}``
-    with the simulator's cycles/hits/misses per point.
+    """Deprecated shim: the cache-organization sweep moved into the unified
+    DSE subsystem. Import ``sweep_memsys`` from ``repro.dse`` instead
+    (same signature and return shape)."""
+    import warnings
 
-    ``memsys`` defaults to every organization registered with the engine.
-    ``sizes`` are the bench constructor's (scalar, gpu) input sizes — the
-    default is a reduced xcorr so a sweep stays interactive; pass ``None``
-    for the paper's Table III sizes. Extra keyword arguments become
-    ``GGPUConfig`` fields (e.g. ``cache_lines=128``)."""
-    from repro.ggpu import programs
-    from repro.ggpu.engine import GGPUConfig, run_kernel
-
-    if memsys is None:
-        memsys = _memsys_choices()
-    build = getattr(programs, f"_{bench}")
-    b = build(*sizes) if sizes is not None else build()
-    out: Dict[Tuple[int, str], dict] = {}
-    for c in n_cus:
-        for ms in memsys:
-            cfg = GGPUConfig(n_cus=c, memsys=ms, **cfg_kw)
-            _, info = run_kernel(b.gpu_prog, b.gpu_mem, b.gpu_items, cfg)
-            out[(c, ms)] = info
-    return out
+    from repro.dse.search import sweep_memsys as _sweep
+    warnings.warn(
+        "repro.core.planner.sweep_memsys is deprecated; use "
+        "repro.dse.sweep_memsys (the unified DSE subsystem)",
+        DeprecationWarning, stacklevel=2)
+    return _sweep(bench=bench, n_cus=n_cus, memsys=memsys, sizes=sizes,
+                  **cfg_kw)
 
 
 def speedup_table(ggpu_cycles: Dict[str, Dict[int, int]],

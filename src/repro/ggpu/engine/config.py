@@ -17,6 +17,18 @@ engine package (vs the original monolithic ``machine.py``):
 
 Both knobs are cycle- and result-neutral for ``memsys="shared"``: they change
 how fast the simulator runs, never what it computes (DESIGN.md §Invariants).
+
+  * ``pipeline_depth`` — the number of pipeline stages GPUPlanner inserted
+    into the logic path to close timing (``GGPUVersion.pipelines``). Unlike
+    ``memsys``/``fuse`` this knob IS architectural: the analytic map assumes
+    pipelining is free, but each inserted stage adds one un-bypassed cycle
+    between a wavefront's back-to-back instructions and deepens the branch
+    shadow, so depth ``d`` costs ``d`` extra issue cycles per executing
+    wavefront per round plus ``d`` refill cycles when a wavefront takes a
+    branch (DESIGN.md §Pipeline-latency feedback). ``pipeline_depth=0`` is
+    bit-exact with the pre-knob engine; the DSE subsystem (``repro.dse``)
+    sets it from the planner's version so wall-clock = cycles(d) / fmax(d)
+    reflects the real fmax-vs-CPI trade-off.
 """
 from __future__ import annotations
 
@@ -38,6 +50,7 @@ class GGPUConfig:
     max_steps: int = 2_000_000
     memsys: str = "shared"   # cache organization (engine.memsys registry)
     fuse: int = 4            # rounds retired per while_loop iteration
+    pipeline_depth: int = 0  # planner-inserted stages: extra issue/branch CPI
 
     @property
     def issue_cycles(self) -> int:

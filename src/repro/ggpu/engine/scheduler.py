@@ -43,16 +43,24 @@ def select_resident(done, *, n_cus: int, max_wf_per_cu: int,
 
 def round_cost(op_col, exec_m, *, extra, issue_cycles: int, cu_of_w,
                n_cus: int, n_elems: int, hit_service, fill_cycles,
-               use_scatter: bool = False):
+               use_scatter: bool = False, pipe_stall=None):
     """Per-element cycle cost of one lockstep round.
 
     CU-side: issue cycles (+ non-pipelined op extras) summed over each CU's
     issuing wavefronts; memory-side: hit traffic streams through the data
     movers concurrently with issue, while DRAM fills serialize on the
     AXI/DRAM path and cannot be hidden once every resident wavefront is
-    stalled on them. Returns (round_cycles (n_elems,), wf_exec (W,))."""
+    stalled on them. Returns (round_cycles (n_elems,), wf_exec (W,)).
+
+    ``pipe_stall`` (optional, (n_elems*W,) int32) is the pipeline-latency
+    feedback term: per-wavefront extra cycles this round from
+    planner-inserted pipeline stages (dependency bubbles + branch refill,
+    see ``stepper``). ``None`` (depth 0) keeps the exact pre-knob cost
+    expression — bit-exactness at depth 0 is by construction."""
     wf_exec = jnp.any(exec_m, axis=1)                    # (n_elems*W,)
     base = (issue_cycles + extra[op_col]) * wf_exec.astype(jnp.int32)
+    if pipe_stall is not None:
+        base = base + pipe_stall
     W = base.shape[0] // n_elems
     if W % n_cus == 0 and not use_scatter:
         # within an element, cu_of_w = w % n_cus: reshape-sum == scatter-add

@@ -84,6 +84,9 @@ def _build_core(cfg: GGPUConfig, B: int, W: int, prog_len: int, msize: int,
     memsys = get_memsys(cfg.memsys)
     if legacy and not isinstance(memsys, SharedCache):
         raise ValueError("legacy reference stepper only models 'shared'")
+    if legacy and cfg.pipeline_depth:
+        raise ValueError("legacy reference stepper predates the "
+                         "pipeline_depth knob (seed model: depth 0 only)")
     fuse = 1 if legacy else max(1, cfg.fuse)
     ops_present = None if ops is None else frozenset(ops)
     has_mem = ops_present is None or bool({isa.LW, isa.SW} & ops_present)
@@ -178,11 +181,21 @@ def _build_core(cfg: GGPUConfig, B: int, W: int, prog_len: int, msize: int,
                                       dense=legacy)
             taken = alu.branch_taken(f.op, f.a, f.b, ops_present) & f.exec_m
             pc, done = frontend.advance(s.pc, s.done, f, taken)
+            if cfg.pipeline_depth > 0:
+                # pipeline-latency feedback: each planner-inserted stage adds
+                # one un-bypassed dependency bubble per issuing wavefront and
+                # one refill cycle when the wavefront takes a branch
+                pipe_stall = cfg.pipeline_depth * (
+                    jnp.any(f.exec_m, axis=1).astype(jnp.int32)
+                    + jnp.any(taken, axis=1).astype(jnp.int32))
+            else:
+                pipe_stall = None
             round_t, wf_exec = scheduler.round_cost(
                 f.op[:, 0], f.exec_m, extra=extra,
                 issue_cycles=cfg.issue_cycles, cu_of_w=cu_of_w,
                 n_cus=n_cus, n_elems=B, hit_service=hit_service,
-                fill_cycles=fill, use_scatter=legacy)
+                fill_cycles=fill, use_scatter=legacy,
+                pipe_stall=pipe_stall)
             cycles = s.cycles + round_t.astype(jnp.int32)
             stats = s.stats + jnp.stack(
                 [per_elem_sum(wf_exec), n_mem, n_hit, n_miss], axis=1)

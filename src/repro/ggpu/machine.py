@@ -29,16 +29,17 @@ Architecture model (FGPU per the paper):
 
 The functional state (registers, memory) is exact; cycles are approximate
 per the cost model above. ``run_kernel`` keeps its original signature and
-bit-exact results; ``run_kernel_batch`` is the new multi-launch path.
+bit-exact results; ``run_kernel_batch`` is the multi-launch path. This
+module is purely a re-export facade — stage internals (``exec_alu`` and
+friends) live in ``repro.ggpu.engine`` and should be imported from there.
 """
 from __future__ import annotations
 
-from repro.ggpu.engine import (GGPUConfig, MachineState, ScalarConfig,
-                               exec_alu, run_kernel, run_kernel_batch,
+from repro.ggpu.engine import (GGPUConfig, KernelLaunchError, MachineState,
+                               ScalarConfig, run_kernel, run_kernel_batch,
                                run_kernel_cohort)
-from repro.ggpu.engine.alu import _mulh32, branch_taken as _branch_taken
 
 __all__ = [
-    "GGPUConfig", "ScalarConfig", "MachineState",
-    "run_kernel", "run_kernel_batch", "run_kernel_cohort", "exec_alu",
+    "GGPUConfig", "ScalarConfig", "MachineState", "KernelLaunchError",
+    "run_kernel", "run_kernel_batch", "run_kernel_cohort",
 ]

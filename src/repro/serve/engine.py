@@ -112,7 +112,9 @@ class LaunchQueue:
     simulator's per-round fixed costs across the whole group; remaining
     launches with a matching wavefront count share one vmapped batch, and
     odd shapes fall back to the single-launch path. Groups are chunked at
-    ``max_batch``. All three paths are bit-exact per launch.
+    ``max_batch`` and drained deterministically in ticket order (each
+    chunk executes in order of its earliest submission — never in dict or
+    group-iteration order). All three paths are bit-exact per launch.
     """
 
     def __init__(self, cfg: GGPUConfig, max_batch: int = 64):
@@ -158,12 +160,39 @@ class LaunchQueue:
             self._pending = pending + self._pending
             raise
 
-    def _run_all(self, pending: List[KernelLaunch]
-                 ) -> List[Tuple[np.ndarray, dict]]:
+    def _plan_chunks(self, pending: List[KernelLaunch]
+                     ) -> List[Tuple[str, List[int]]]:
+        """Grouping pass: (kind, tickets) chunks — same-kernel cohorts,
+        same-wavefront vmap batches, singleton fallbacks — ordered by each
+        chunk's first ticket. The drain order is a pure function of the
+        submission order, never of dict/group iteration order."""
         cohorts: Dict[Tuple, List[int]] = {}
         for i, kl in enumerate(pending):
             key = (kl.prog.tobytes(), kl.n_items, kl.mem0.shape[0])
             cohorts.setdefault(key, []).append(i)
+        chunks: List[Tuple[str, List[int]]] = []
+        stragglers: List[int] = []
+        for members in cohorts.values():
+            if len(members) == 1:
+                stragglers.append(members[0])
+                continue
+            for lo in range(0, len(members), self.max_batch):
+                chunks.append(("cohort", members[lo:lo + self.max_batch]))
+        # stragglers: vmap-batch per wavefront bucket, singles otherwise
+        buckets: Dict[int, List[int]] = {}
+        for i in sorted(stragglers):
+            buckets.setdefault(self._wavefronts(pending[i].n_items),
+                               []).append(i)
+        for members in buckets.values():
+            for lo in range(0, len(members), self.max_batch):
+                chunk = members[lo:lo + self.max_batch]
+                chunks.append(("single" if len(chunk) == 1 else "batch",
+                               chunk))
+        chunks.sort(key=lambda kc: kc[1][0])
+        return chunks
+
+    def _run_all(self, pending: List[KernelLaunch]
+                 ) -> List[Tuple[np.ndarray, dict]]:
         results: List[Optional[Tuple[np.ndarray, dict]]] = \
             [None] * len(pending)
 
@@ -177,50 +206,29 @@ class LaunchQueue:
                 + f" hit max_steps without halting; discard({ticket}) "
                 f"and flush() again to retry the rest", ticket) from exc
 
-        stragglers: List[int] = []
-        for members in cohorts.values():
-            if len(members) == 1:
-                stragglers.append(members[0])
-                continue
-            for lo in range(0, len(members), self.max_batch):
-                chunk = members[lo:lo + self.max_batch]
-                i0 = chunk[0]
-                try:
+        for kind, chunk in self._plan_chunks(pending):
+            try:
+                if kind == "cohort":
+                    i0 = chunk[0]
                     outs = _ggpu_run_kernel_cohort(
                         pending[i0].prog, [pending[i].mem0 for i in chunk],
                         pending[i0].n_items, self.cfg)
-                except KernelLaunchError as exc:
-                    blame(chunk, exc)
-                for i, out in zip(chunk, outs):
-                    results[i] = out
-        # stragglers: vmap-batch per wavefront bucket, singles otherwise
-        buckets: Dict[int, List[int]] = {}
-        for i in sorted(stragglers):
-            buckets.setdefault(self._wavefronts(pending[i].n_items),
-                               []).append(i)
-        for members in buckets.values():
-            for lo in range(0, len(members), self.max_batch):
-                chunk = members[lo:lo + self.max_batch]
-                if len(chunk) == 1:
-                    i = chunk[0]
-                    try:
-                        mem, info = _ggpu_run_kernel(
-                            pending[i].prog, pending[i].mem0,
-                            pending[i].n_items, self.cfg)
-                    except KernelLaunchError as exc:
-                        blame(chunk, exc)
-                    info["batch_size"] = 1
-                    results[i] = (mem, info)
-                    continue
-                try:
+                elif kind == "batch":
                     outs = _ggpu_run_kernel_batch(
                         [pending[i].prog for i in chunk],
                         [pending[i].mem0 for i in chunk],
                         [pending[i].n_items for i in chunk], self.cfg)
-                except KernelLaunchError as exc:
-                    blame(chunk, exc)
-                for i, out in zip(chunk, outs):
-                    results[i] = out
+                else:
+                    i = chunk[0]
+                    mem, info = _ggpu_run_kernel(
+                        pending[i].prog, pending[i].mem0,
+                        pending[i].n_items, self.cfg)
+                    info["batch_size"] = 1
+                    outs = [(mem, info)]
+            except KernelLaunchError as exc:
+                blame(chunk, exc)
+            for i, out in zip(chunk, outs):
+                results[i] = out
         for i, kl in enumerate(pending):
             if kl.tag:
                 results[i][1]["tag"] = kl.tag

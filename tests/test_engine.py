@@ -215,6 +215,64 @@ def test_launch_queue_restores_on_failure_and_surfaces_tags():
     assert info["tag"] == "good"
 
 
+def test_launch_queue_drains_in_ticket_order(monkeypatch):
+    """Regression: chunks must execute ordered by their earliest ticket —
+    a pure function of submission order — not by cohort-dict/group
+    iteration order (which used to run all cohorts before any batch or
+    singleton, regardless of when they were submitted)."""
+    import repro.serve.engine as se
+    order = []
+
+    def spy(name, fn):
+        def wrapper(*args, **kw):
+            order.append(name)
+            return fn(*args, **kw)
+        return wrapper
+
+    monkeypatch.setattr(se, "_ggpu_run_kernel",
+                        spy("single", se._ggpu_run_kernel))
+    monkeypatch.setattr(se, "_ggpu_run_kernel_cohort",
+                        spy("cohort", se._ggpu_run_kernel_cohort))
+    monkeypatch.setattr(se, "_ggpu_run_kernel_batch",
+                        spy("batch", se._ggpu_run_kernel_batch))
+
+    cfg = GGPUConfig(n_cus=2)
+    q = LaunchQueue(cfg)
+    big = programs._copy(64, 1024)       # W=16: singleton bucket
+    small = programs._copy(64, 256)      # W=4: cohort group
+    t0 = q.submit(big.gpu_prog, big.gpu_mem, big.gpu_items)      # single
+    t1 = q.submit(small.gpu_prog, small.gpu_mem, small.gpu_items)
+    t2 = q.submit(small.gpu_prog, small.gpu_mem, small.gpu_items)
+    results = q.flush()
+    # ticket 0's singleton chunk must run before ticket 1's cohort
+    assert order == ["single", "cohort"]
+    assert [info["batch_size"] for _, info in results] == [1, 2, 2]
+    for t in (t0, t1, t2):
+        assert results[t] is not None
+
+
+def test_launch_queue_chunk_plan_is_submission_deterministic():
+    """The drain plan is identical for identical submission sequences and
+    orders chunks by first ticket."""
+    cfg = GGPUConfig()
+    b1 = programs._copy(64, 256)
+    b2 = programs._copy(64, 1024)
+
+    def build():
+        q = LaunchQueue(cfg, max_batch=2)
+        q.submit(b2.gpu_prog, b2.gpu_mem, b2.gpu_items)   # 0: singleton
+        for _ in range(3):                                # 1-3: cohort x2
+            q.submit(b1.gpu_prog, b1.gpu_mem, b1.gpu_items)
+        return q
+
+    plan_a = build()._plan_chunks(build()._pending)
+    plan_b = build()._plan_chunks(build()._pending)
+    assert plan_a == plan_b
+    firsts = [chunk[0] for _, chunk in plan_a]
+    assert firsts == sorted(firsts)
+    assert [k for k, _ in plan_a] == ["single", "cohort", "cohort"]
+
+
 def test_launch_queue_respects_max_batch():
     cfg = GGPUConfig()
     q = LaunchQueue(cfg, max_batch=2)
@@ -235,7 +293,7 @@ def test_scalar_runs_on_engine():
 
 
 def test_planner_memsys_sweep():
-    from repro.core.planner import sweep_memsys
+    from repro.dse import sweep_memsys
     sweep = sweep_memsys(bench="xcorr", n_cus=(1,), sizes=(32, 128))
     # defaults must track the engine registry (single source of truth)
     assert set(sweep) == {(1, ms) for ms in MEMSYS_REGISTRY}

@@ -127,7 +127,7 @@ def test_pe_simd_property_random(w, l, seed):
 def test_pe_simd_matches_machine_alu():
     """The Pallas kernel and the simulator's exec_alu agree (the kernel is
     the TPU twin of the machine's hot loop)."""
-    from repro.ggpu.machine import exec_alu
+    from repro.ggpu.engine.alu import exec_alu
     rng = np.random.default_rng(3)
     w, l = 16, 64
     op = jnp.asarray(rng.integers(1, 23, (w, 1)), jnp.int32)
@@ -142,7 +142,7 @@ def test_pe_simd_matches_machine_alu():
 
 def test_mulh_vs_bigint():
     """The int32-only MULH decomposition is exact vs python big ints."""
-    from repro.ggpu.machine import _mulh32
+    from repro.ggpu.engine.alu import _mulh32
     rng = np.random.default_rng(7)
     a = rng.integers(-2**31, 2**31, 10000).astype(np.int32)
     b = rng.integers(-2**31, 2**31, 10000).astype(np.int32)

@@ -93,3 +93,54 @@ def test_division_limit_stops():
     """A absurd target fails gracefully at the division/pipeline limits."""
     p = plan(1, 2000.0)
     assert not p.achieved
+
+
+def test_map_log_is_the_dynamic_spreadsheet():
+    """The map log carries everything the paper's 'dynamic spreadsheet'
+    shows a designer: per-iteration fmax, the named bottleneck, the action
+    taken, and all three candidate critical paths."""
+    p = plan(1, 667.0)
+    assert p.achieved
+    its = [e.iteration for e in p.map_log]
+    assert its == sorted(its) and len(set(its)) == len(its)
+    for e in p.map_log:
+        assert set(e.paths) == {"memory", "logic", "interconnect"}
+        assert e.fmax_mhz > 0
+    # memory is the baseline bottleneck, so the map divides first
+    assert p.map_log[0].bottleneck.startswith("memory:")
+    assert p.map_log[0].action.startswith("divide")
+    assert p.map_log[-1].action == "target met"
+    # fmax never degrades along the map (division/pipelining only help)
+    fmaxes = [e.fmax_mhz for e in p.map_log]
+    assert all(b >= a - 1e-9 for a, b in zip(fmaxes, fmaxes[1:]))
+
+
+def test_twelve_versions_table1_anchor_points():
+    """Table I anchors: 12 versions in freq-major order; the 500 MHz
+    baseline is the paper's 51-block memory map; only 8CU@667 misses its
+    target and lands at the ~600 MHz interconnect stop."""
+    plans = enumerate_versions()
+    assert len(plans) == 12
+    reqs = [(f, c) for f in (500.0, 590.0, 667.0) for c in (1, 2, 4, 8)]
+    for p, (f, c) in zip(plans, reqs):
+        assert p.version.n_cus == c
+        if (c, f) != (8, 667.0):
+            assert p.achieved, (c, f, p.reason)
+            assert p.version.freq_mhz == f
+    base = plans[0].version
+    # the modeled inventory: 28 per-CU + 9 fixed blocks (coarser than the
+    # paper's 51 — block counts scale linearly with CUs like Table I's)
+    assert base.n_memories() == 37
+    assert plans[3].version.n_memories() == 28 * 8 + 9
+    assert base.pipelines == 0
+    # Table I trend: higher-frequency versions divide more memories
+    assert plans[8].version.n_memories() > base.n_memories()
+    stop = plans[-1]
+    assert not stop.achieved
+    assert stop.map_log[-1].bottleneck == "interconnect"
+    assert 595 <= stop.version.freq_mhz <= 605   # the paper's ~600 derate
+    # higher-frequency versions pay the paper's area trade-off
+    for c_ix in range(4):
+        a500 = plans[c_ix].version.total_area_mm2()
+        a667 = plans[8 + c_ix].version.total_area_mm2()
+        assert a667 > a500
