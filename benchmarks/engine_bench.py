@@ -63,7 +63,7 @@ def bench_fused_dispatch(emit, n_gpu: int = 1024, n_cus: int = 2) -> float:
 def bench_batched_launch(emit, n_launches: int = 8, n: int = 512) -> float:
     from repro.ggpu import programs
     from repro.ggpu.engine import ScalarConfig, run_kernel
-    from repro.serve.engine import LaunchQueue
+    from repro.serve import LaunchQueue
 
     # same-kernel launch burst over distinct memory images: the RISC-V
     # baseline div_int program (tiny 1-lane machine, thousands of rounds —

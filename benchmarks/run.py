@@ -1,7 +1,8 @@
 """Benchmark harness: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Usage:
-  PYTHONPATH=src python -m benchmarks.run [--fast] [--engine] [--dse]
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--engine] [--dse] \
+      [--serve]
 ``--fast`` skips the O(n^2) cycle simulations (xcorr/parallel_sel) and
 shrinks the engine/DSE grids.
 ``--engine`` runs only the simulator-engine micro-benchmarks (fused
@@ -9,6 +10,9 @@ dispatch, batched launch queue, memory-system DSE sweep, unified DSE
 search) and writes the ``BENCH_dse.json`` artifact.
 ``--dse`` runs only the unified DSE Pareto sweep + artifact
 (``--dse --fast`` is the 2-point CI smoke).
+``--serve`` runs the serving-subsystem throughput + fleet-routing
+benchmark and writes the ``BENCH_serve.json`` artifact (schema
+``ggpu-serve/1``; ``--serve --fast`` is the CI ``serve-smoke`` job).
 """
 from __future__ import annotations
 
@@ -22,6 +26,10 @@ def main() -> None:
         print(f"{name},{us:.3f},{derived}")
 
     print("name,us_per_call,derived")
+    if "--serve" in sys.argv:
+        from benchmarks import serve_bench
+        serve_bench.bench_serve(emit, fast=fast)
+        return
     if "--dse" in sys.argv:
         from benchmarks import engine_bench
         engine_bench.bench_dse(emit, fast=fast)

@@ -1,0 +1,153 @@
+"""Serving-subsystem benchmark (``python -m benchmarks.run --serve``).
+
+Two sections, both recorded in the standardized ``BENCH_serve.json``
+artifact (schema ``ggpu-serve/1``, path overridable via
+``GGPU_SERVE_OUT``):
+
+  * **throughput** — a bursty same-kernel trace served through the
+    continuous-batching ``Scheduler`` (submit interleaved with
+    incremental drains). Reports launches/sec (warm wall-clock, compile
+    excluded), batch occupancy (launches per compiled-stepper dispatch),
+    and the executor trace-cache hit rate — repeat traffic must not
+    re-trace.
+  * **fleet** — the routing demo connecting the DSE output to the serving
+    path: a mixed wide+narrow trace is served across two configs picked
+    from a ``repro.dse.search`` Pareto front, and the routed fleet's
+    modeled makespan is compared against pinning the whole trace to
+    either single config.
+
+``--fast`` shrinks the trace and the DSE grid (the CI ``serve-smoke``
+job).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+SCHEMA = "ggpu-serve/1"
+
+
+def _bursty_mems(b, k, rng):
+    """k fresh memory images for bench ``b`` (same envelope, new data)."""
+    n = b.gpu_mem.shape[0]
+    return [np.concatenate([rng.integers(-100, 100,
+                                         2 * b.gpu_n).astype(np.int32),
+                            np.zeros(n - 2 * b.gpu_n, np.int32)])
+            for _ in range(k)]
+
+
+def bench_throughput(emit, fast: bool) -> dict:
+    from repro.ggpu import programs
+    from repro.ggpu.engine import GGPUConfig
+    from repro.serve import Scheduler
+
+    cfg = GGPUConfig(n_cus=2)
+    b = programs._vec_mul(32, 1024 if fast else 4096)
+    burst = 4 if fast else 8
+    n_bursts = 2 if fast else 4
+    rng = np.random.default_rng(0)
+    sched = Scheduler(cfg)
+    for m in _bursty_mems(b, burst, rng):
+        sched.submit(b.gpu_prog, m, b.gpu_items)
+    sched.drain()                            # warm-up: pay the jit compile
+    st = sched.executor.stats
+    l0, d0 = st.launches, st.dispatches
+    h0, m0 = st.trace_hits, st.trace_misses
+    t0 = time.perf_counter()
+    served = 0
+    for _ in range(n_bursts):                # submissions interleave drains
+        for m in _bursty_mems(b, burst, rng):
+            sched.submit(b.gpu_prog, m, b.gpu_items)
+        served += len(sched.drain())
+    wall = time.perf_counter() - t0
+    hits = st.trace_hits - h0
+    misses = st.trace_misses - m0
+    row = {
+        "device": f"{cfg.n_cus}cu/{cfg.memsys}",
+        "kernel": b.name,
+        "launches": served,
+        "wall_s": round(wall, 4),
+        "launches_per_sec": round(served / wall, 2),
+        "batch_occupancy": round((st.launches - l0)
+                                 / (st.dispatches - d0), 3),
+        "executor_cache": {"hits": hits, "misses": misses,
+                           "hit_rate": round(hits / (hits + misses), 3)},
+    }
+    emit("serve/throughput", wall / served * 1e6,
+         f"launches_per_sec={row['launches_per_sec']} "
+         f"occupancy={row['batch_occupancy']} "
+         f"cache_hit_rate={row['executor_cache']['hit_rate']}")
+    return row
+
+
+def bench_fleet(emit, fast: bool) -> dict:
+    from repro import dse
+    from repro.ggpu import programs
+    from repro.serve import Fleet, pinned_makespan
+
+    # DSE-selected devices: the (fastest, smallest) ends of a Pareto front
+    if fast:
+        specs = dse.enumerate_specs(cus=(1, 8), freq_targets=(667.0,))
+        ev = dse.Evaluator(benches=("xcorr",), sizes={"xcorr": (16, 128)})
+    else:
+        specs = dse.enumerate_specs(cus=(1, 2, 4, 8),
+                                    freq_targets=(500.0, 667.0))
+        ev = dse.Evaluator(benches=("xcorr",), sizes={"xcorr": (32, 256)})
+    res = dse.search(specs=specs, evaluator=ev)
+    frontier = sorted(res.frontier, key=lambda p: p.time_us)
+    picks = [frontier[0], frontier[-1]]
+    if picks[0] is picks[1]:
+        raise RuntimeError("DSE frontier collapsed to one design: nothing "
+                           "to route across — widen the spec grid")
+    devices = [(p.label(), p.point.config) for p in picks]
+
+    wide = programs._copy(16, 1024 if fast else 4096)      # many wavefronts
+    narrow = programs._reduction(64, 256 if fast else 1024)  # W=1
+    rng = np.random.default_rng(1)
+    trace = []
+    for _ in range(3 if fast else 8):
+        trace.append((wide.gpu_prog, _bursty_mems(wide, 1, rng)[0],
+                      wide.gpu_items))
+        trace.append((narrow.gpu_prog, _bursty_mems(narrow, 1, rng)[0],
+                      narrow.gpu_items))
+
+    fleet = Fleet(devices)
+    for prog, mem0, n_items in trace:
+        fleet.submit(prog, mem0, n_items)
+    fleet.drain()
+    rep = fleet.report()
+    pinned = {name: round(pinned_makespan(cfg, trace), 3)
+              for name, cfg in devices}
+    best_pin = min(pinned.values())
+    rep.update({
+        "pinned_us": pinned,
+        "speedup_vs_best_pin": round(best_pin / rep["makespan_us"], 3),
+        "beats_both_pins": rep["makespan_us"] < best_pin,
+    })
+    emit("serve/fleet/makespan", rep["makespan_us"],
+         f"devices={'+'.join(rep['devices'])} "
+         f"placement={rep['placement']} "
+         f"pinned_us={pinned} speedup={rep['speedup_vs_best_pin']}x")
+    return rep
+
+
+def bench_serve(emit, fast: bool = False, out: str = None) -> None:
+    """Run both sections and write the ``BENCH_serve.json`` artifact."""
+    out = out or os.environ.get("GGPU_SERVE_OUT", "BENCH_serve.json")
+    throughput = bench_throughput(emit, fast)
+    fleet = bench_fleet(emit, fast)
+    art = {
+        "schema": SCHEMA,
+        "launches_per_sec": throughput["launches_per_sec"],
+        "batch_occupancy": throughput["batch_occupancy"],
+        "cache_hit_rate": throughput["executor_cache"]["hit_rate"],
+        "throughput": throughput,
+        "fleet": fleet,
+    }
+    with open(out, "w") as f:
+        json.dump(art, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("serve/artifact", 0.0, f"wrote {out}")

@@ -1,8 +1,10 @@
 """Batched serving example: prefill + slot-batched decode on any arch, and
-the same continuous-batching idea applied to G-GPU kernel launches.
+the same continuous-batching idea applied to G-GPU kernel launches — plus
+the fleet router serving a mixed trace across two DSE-selected configs.
 
     PYTHONPATH=src python examples/serve_decode.py --arch granite-8b
     PYTHONPATH=src python examples/serve_decode.py --ggpu 6
+    PYTHONPATH=src python examples/serve_decode.py --fleet 4
 """
 import argparse
 import time
@@ -13,7 +15,7 @@ def serve_llm(args):
 
     from repro.configs import ARCH_IDS, get_smoke
     from repro.models.schema import init_params
-    from repro.serve.engine import Engine, EngineConfig
+    from repro.serve import Engine, EngineConfig
 
     cfg = get_smoke(args.arch)
     if cfg.is_encoder_only:
@@ -28,41 +30,90 @@ def serve_llm(args):
 
 
 def serve_ggpu(n_requests: int):
-    """A burst of G-GPU kernel launch requests served through the batched
-    LaunchQueue: same-shape launches ride one vmapped stepper call."""
+    """A burst of G-GPU kernel launch requests served through the
+    continuous-batching Scheduler: same-shape launches ride one cohort
+    stepper call, and submissions interleave with incremental drains."""
     import numpy as np
 
     from repro.ggpu import programs
     from repro.ggpu.engine import GGPUConfig
-    from repro.serve.engine import LaunchQueue
+    from repro.serve import Scheduler
 
     cfg = GGPUConfig(n_cus=2)
     b = programs._vec_mul(64, 2048)
     rng = np.random.default_rng(0)
-    queue = LaunchQueue(cfg)
+    sched = Scheduler(cfg)
 
     def submit_burst():
-        refs = []
+        refs = {}
         for i in range(n_requests):
             mem0 = np.concatenate([
                 rng.integers(-100, 100, 2 * 2048).astype(np.int32),
                 np.zeros(2048, np.int32)])
-            queue.submit(b.gpu_prog, mem0, b.gpu_items, tag=f"req{i}")
-            refs.append(b.ref(mem0, 2048))
+            t = sched.submit(b.gpu_prog, mem0, b.gpu_items, tag=f"req{i}")
+            refs[t] = b.ref(mem0, 2048)
         return refs
 
     submit_burst()
-    queue.flush()                 # warm-up: pay the one-time jit compile
+    sched.drain()                 # warm-up: pay the one-time jit compile
     refs = submit_burst()
+    st = sched.executor.stats
+    l0, d0, h0 = st.launches, st.dispatches, st.trace_hits
     t0 = time.perf_counter()
-    results = queue.flush()
+    results = sched.drain()
     dt = time.perf_counter() - t0
-    for i, ((mem, info), ref) in enumerate(zip(results, refs)):
-        ok = np.array_equal(mem[b.gpu_out], ref)
-        print(f"req{i}: cycles={info['cycles']} "
-              f"batch={info['batch_size']} correct={ok}")
+    for res in results:
+        t = res.info["ticket"]
+        ok = np.array_equal(res.mem[b.gpu_out], refs[t])
+        print(f"{res.info['tag']}: cycles={res.info['cycles']} "
+              f"batch={res.info['batch_size']} correct={ok}")
+    # deltas over the measured burst only (warm-up compile excluded)
+    dispatches = st.dispatches - d0
     print(f"served {n_requests} launches in {dt * 1e3:.1f} ms "
-          f"(one compiled stepper, batched; compile excluded)")
+          f"(occupancy {(st.launches - l0) / dispatches:.1f} "
+          f"launches/dispatch, trace-cache hit rate "
+          f"{(st.trace_hits - h0) / dispatches:.0%}; compile excluded)")
+
+
+def serve_fleet(n_bursts: int):
+    """Route a mixed wide+narrow trace across the two ends of a DSE Pareto
+    front and compare against pinning everything to one config."""
+    import numpy as np
+
+    from repro import dse
+    from repro.ggpu import programs
+    from repro.serve import Fleet, pinned_makespan
+
+    res = dse.search(specs=dse.enumerate_specs(cus=(1, 8),
+                                               freq_targets=(667.0,)),
+                     evaluator=dse.Evaluator(benches=("xcorr",),
+                                             sizes={"xcorr": (16, 128)}))
+    frontier = sorted(res.frontier, key=lambda p: p.time_us)
+    if frontier[0] is frontier[-1]:
+        raise SystemExit("DSE frontier collapsed to one design: nothing to "
+                         "route across — widen the spec grid")
+    devices = [(p.label(), p.point.config)
+               for p in (frontier[0], frontier[-1])]
+    print("fleet devices:", " + ".join(name for name, _ in devices))
+
+    wide = programs._copy(16, 1024)          # W=16: wants CUs
+    narrow = programs._reduction(64, 256)    # W=1: wants clock
+    rng = np.random.default_rng(0)
+    trace = []
+    for _ in range(n_bursts):
+        for b in (wide, narrow):
+            mem0 = rng.integers(-50, 50, b.gpu_mem.shape[0]).astype(np.int32)
+            trace.append((b.gpu_prog, mem0, b.gpu_items))
+
+    fleet = Fleet(devices)
+    for prog, mem0, n_items in trace:
+        fleet.submit(prog, mem0, n_items)
+    fleet.drain()
+    rep = fleet.report()
+    print(f"placement: {rep['placement']}")
+    print(f"fleet makespan: {rep['makespan_us']:.1f} us (modeled)")
+    for name, cfg in devices:
+        print(f"pinned to {name}: {pinned_makespan(cfg, trace):.1f} us")
 
 
 def main():
@@ -74,9 +125,13 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--ggpu", type=int, default=0, metavar="N",
                     help="serve N G-GPU kernel launches instead of LLM decode")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="serve N mixed bursts across a 2-config DSE fleet")
     args = ap.parse_args()
 
-    if args.ggpu:
+    if args.fleet:
+        serve_fleet(args.fleet)
+    elif args.ggpu:
         serve_ggpu(args.ggpu)
     else:
         serve_llm(args)

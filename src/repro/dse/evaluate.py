@@ -4,12 +4,14 @@ The evaluator is where the DSE gets cheap enough to search: candidate
 design points are grouped by their *engine-visible* configuration (the
 frozen ``GGPUConfig`` — frequency targets that plan to the same pipeline
 depth share one simulation), every uncached (config, bench) pair is
-submitted to one ``serve.engine.LaunchQueue`` per config, and the queue
-folds same-shape launches through ``run_kernel_cohort`` /
+submitted to one ``serve.Scheduler`` drain per config, and the scheduler's
+chunk planner folds same-shape launches through ``run_kernel_cohort`` /
 ``run_kernel_batch`` so a whole bench suite costs one or two compiled
-stepper dispatches instead of N. Results are cached for the lifetime of
-the evaluator, so a sweep of 24+ points typically simulates far fewer
-unique configurations.
+stepper dispatches instead of N. Cycle results are memoized on the
+process-wide shared executor (``serve.executors.get_executor``) keyed by
+the bench content, so sweeps, repeat evaluators, and serving fleets that
+touch the same configuration share both the compiled steppers and the
+cached cycles.
 
 Each point is also evaluated under the **free-pipelining assumption**
 (the same config at ``pipeline_depth=0``) — the cycles the analytic map
@@ -101,54 +103,93 @@ class Evaluator:
     def __init__(self, benches: Sequence[str] = DEFAULT_BENCHES,
                  sizes: Optional[Dict[str, Tuple[int, int]]] = None,
                  check: bool = False):
+        import hashlib
+
         from repro.ggpu import programs
         self.bench_names = tuple(benches)
         sizes = dict(sizes or DEFAULT_SIZES)
         self._benches = {}
+        self._keys: Dict[str, tuple] = {}
         for name in self.bench_names:
             build = getattr(programs, f"_{name}")
             sz = sizes.get(name)
-            self._benches[name] = build(*sz) if sz is not None else build()
+            b = build(*sz) if sz is not None else build()
+            self._benches[name] = b
+            # content-addressed memo key: safe to share across evaluators
+            # with different bench sizes on the same executor
+            self._keys[name] = (
+                "bench", name, b.gpu_items,
+                hashlib.sha1(b.gpu_prog.tobytes()).hexdigest(),
+                hashlib.sha1(b.gpu_mem.tobytes()).hexdigest())
         self.check = check
-        # (sim-key config, bench name) -> (info dict, sim wall-clock share)
-        self._cache: Dict[Tuple[GGPUConfig, str], Tuple[dict, float]] = {}
+        # (sim config, bench key) pairs THIS evaluator has verified; with
+        # check=True a bench memoized by another (unchecked) evaluator is
+        # re-simulated so the requested verification actually runs
+        self._verified: set = set()
 
     # -- simulation ---------------------------------------------------------
 
     @staticmethod
     def _sim_key(cfg: GGPUConfig) -> GGPUConfig:
         """``freq_mhz`` never enters the traced cycle computation, so it is
-        normalized out of the simulation/cache key: frequency targets that
-        plan to the same pipeline depth share one compiled stepper and one
-        simulation (the config is a static jit argument — without this,
-        every distinct frequency would recompile)."""
-        return dataclasses.replace(cfg, freq_mhz=500.0)
+        normalized out of the simulation/cache key (see
+        ``serve.executors.sim_key``): frequency targets that plan to the
+        same pipeline depth share one compiled stepper and one simulation
+        (the config is a static jit argument — without this, every
+        distinct frequency would recompile)."""
+        from repro.serve.executors import sim_key
+        return sim_key(cfg)
 
     def _simulate_config(self, cfg: GGPUConfig, names: Sequence[str]) -> None:
-        """Run every uncached bench for one engine config as a single
-        LaunchQueue flush (cohort/batch-folded where shapes allow)."""
-        from repro.serve.engine import LaunchQueue
-        cfg = self._sim_key(cfg)
-        todo = [n for n in names if (cfg, n) not in self._cache]
+        """Run every unmemoized bench for one engine config as a single
+        Scheduler drain (cohort/batch-folded where shapes allow) on the
+        process-wide shared executor for that config."""
+        from repro.serve.executors import get_executor
+        from repro.serve.scheduler import Scheduler
+        ex = get_executor(cfg)
+        todo = [n for n in names
+                if self._keys[n] not in ex.memo
+                or (self.check
+                    and (ex.cfg, self._keys[n]) not in self._verified)]
         if not todo:
             return
-        q = LaunchQueue(cfg)
+        sched = Scheduler(executor=ex)
         for n in todo:
             b = self._benches[n]
-            q.submit(b.gpu_prog, b.gpu_mem, b.gpu_items, tag=n)
+            sched.submit(b.gpu_prog, b.gpu_mem, b.gpu_items, tag=n)
         t0 = time.perf_counter()
-        results = q.flush()
+        results = sched.drain()
         wall = (time.perf_counter() - t0) / len(todo)
-        for n, (mem, info) in zip(todo, results):
+        if sched.quarantined:
+            from repro.ggpu.engine import KernelLaunchError
+            bad = "; ".join(f"{q.request.tag}: {q.error}"
+                            for q in sched.quarantined.values())
+            raise KernelLaunchError(
+                f"bench simulation did not halt under {cfg}: {bad}")
+        for mem, info in results:
+            n = info["tag"]          # align by tag, not submission order
             if self.check:
                 b = self._benches[n]
                 np.testing.assert_array_equal(
                     mem[b.gpu_out], b.ref(b.gpu_mem, b.gpu_n))
-            self._cache[(cfg, n)] = (info, wall)
+                self._verified.add((ex.cfg, self._keys[n]))
+            ex.memo[self._keys[n]] = (info, wall)
+
+    def _lookup(self, cfg: GGPUConfig, bench: str) -> Tuple[dict, float]:
+        from repro.serve.executors import get_executor
+        return get_executor(cfg).memo[self._keys[bench]]
+
+    def cache_size(self) -> int:
+        """Memoized (config, bench) entries for this evaluator's bench set
+        across the shared executor registry."""
+        from repro.serve.executors import _EXECUTORS
+        keys = set(self._keys.values())
+        return sum(1 for ex in _EXECUTORS.values()
+                   for k in ex.memo if k in keys)
 
     def cycles(self, cfg: GGPUConfig, bench: str) -> Tuple[dict, float]:
         self._simulate_config(cfg, [bench])
-        info, wall = self._cache[(self._sim_key(cfg), bench)]
+        info, wall = self._lookup(cfg, bench)
         # restate frequency-derived fields for the caller's actual config
         info = dict(info)
         info["time_us"] = info["cycles"] / cfg.freq_mhz
@@ -174,8 +215,8 @@ class Evaluator:
             cfg0 = dataclasses.replace(p.config, pipeline_depth=0)
             per_bench: Dict[str, BenchMetrics] = {}
             for n in self.bench_names:
-                info, wall = self._cache[(self._sim_key(p.config), n)]
-                info0, _ = self._cache[(self._sim_key(cfg0), n)]
+                info, wall = self._lookup(p.config, n)
+                info0, _ = self._lookup(cfg0, n)
                 cyc, cyc0 = info["cycles"], info0["cycles"]
                 info = dict(info)
                 info["time_us"] = cyc / p.freq_mhz

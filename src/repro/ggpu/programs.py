@@ -316,9 +316,74 @@ def _parallel_sel(n_scalar=128, n_gpu=2048):
                  slice(n_scalar, 2 * n_scalar), ref, n_gpu, n_scalar)
 
 
+# ---------------------------------------------------------------------------
+# reduction (segmented parallel dot/sum: few outputs over many inputs —
+# beyond the paper's seven; the shape none of them cover)
+# ---------------------------------------------------------------------------
+
+REDUCTION_SEG = 64          # inputs folded per work-item (power of two)
+
+
+def _reduction(n_scalar=1024, n_gpu=32768, seg=REDUCTION_SEG):
+    """Parallel reduction: work-item ``i`` computes the dot product of the
+    ``seg``-long segments ``a[i*seg:(i+1)*seg] . b[...]`` and stores the
+    partial at ``out[i]`` — the first (parallel) phase of a tree dot/sum.
+    Unlike the paper's seven benches, the item count is ``n/seg``, so the
+    launch is load-heavy per item with few wavefronts — the shape a fleet
+    router places on a small high-clock device while wide launches go to a
+    many-CU one."""
+    if n_scalar % seg or n_gpu % seg:
+        raise ValueError(f"reduction sizes must be multiples of seg={seg}")
+    lg = int(np.log2(seg))
+    if 1 << lg != seg:
+        raise ValueError("seg must be a power of two")
+
+    def mem(n):
+        return np.concatenate([_rand(n, -100, 100, seed=13),
+                               _rand(n, -100, 100, seed=14),
+                               np.zeros(n // seg, np.int32)])
+
+    def build(n, outer: bool):
+        k = n // seg
+        a = Assembler()
+        if outer:
+            a.li(11, 0).li(12, k)
+            a.label("outer").bge(11, 12, "end")
+            i_reg = 11
+        else:
+            a.tid(1)
+            i_reg = 1
+        a.slli(2, i_reg, lg)                 # base = i * seg
+        a.li(3, 0).li(4, 0).li(5, seg)
+        a.label("loop").bge(4, 5, "done")
+        a.add(6, 2, 4)
+        a.lw(7, 6, 0).lw(8, 6, n).mul(7, 7, 8).add(3, 3, 7)
+        a.addi(4, 4, 1).beq(0, 0, "loop")
+        a.label("done").sw(3, i_reg, 2 * n)
+        if outer:
+            a.addi(11, 11, 1).beq(0, 0, "outer")
+            a.label("end").halt()
+        else:
+            a.halt()
+        return a
+
+    def ref(m, n):
+        a = m[:n].astype(np.int64).reshape(-1, seg)
+        b = m[n:2 * n].astype(np.int64).reshape(-1, seg)
+        return (a * b).sum(axis=1).astype(np.int32)
+
+    return Bench("reduction", build(n_gpu, False).assemble(), mem(n_gpu),
+                 n_gpu // seg, slice(2 * n_gpu, 2 * n_gpu + n_gpu // seg),
+                 build(n_scalar, True).assemble(), mem(n_scalar),
+                 slice(2 * n_scalar, 2 * n_scalar + n_scalar // seg), ref,
+                 n_gpu, n_scalar)
+
+
 def all_benches() -> Dict[str, Bench]:
+    """The paper's seven benches plus the ``reduction`` extension (the
+    paper tables only report the seven in ``PAPER_CYCLES``)."""
     bs = [_mat_mul(), _copy(), _vec_mul(), _fir(), _div_int(), _xcorr(),
-          _parallel_sel()]
+          _parallel_sel(), _reduction()]
     return {b.name: b for b in bs}
 
 

@@ -1,0 +1,25 @@
+"""Multi-tenant serving subsystem for the G-GPU reproduction.
+
+One continuous-batching core with two tenants: the G-GPU kernel launch
+path (submit/drain over the cycle-accurate simulator, with cohort/vmap
+batching, failure quarantine, and a multi-config fleet router) and the
+slot-batched LLM engine. See DESIGN.md §Serving subsystem.
+
+``repro.serve.engine`` is the stable compatibility facade; the package
+modules are the API for new code.
+"""
+from repro.serve.executors import (Executor, ExecutorStats, get_executor,
+                                   sim_key)
+from repro.serve.fleet import Fleet, FleetDevice, pinned_makespan
+from repro.serve.llm import Engine, EngineConfig
+from repro.serve.request import KernelLaunch, Request, Result
+from repro.serve.scheduler import (AdmissionError, Chunk, LaunchQueue,
+                                   Quarantined, Scheduler, plan_chunks,
+                                   plan_waves, wavefronts)
+
+__all__ = [
+    "AdmissionError", "Chunk", "Engine", "EngineConfig", "Executor",
+    "ExecutorStats", "Fleet", "FleetDevice", "KernelLaunch", "LaunchQueue",
+    "Quarantined", "Request", "Result", "Scheduler", "get_executor",
+    "pinned_makespan", "plan_chunks", "plan_waves", "sim_key", "wavefronts",
+]

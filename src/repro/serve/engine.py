@@ -1,235 +1,35 @@
-"""Batched serving engine: prefill + decode with slot-based continuous
-batching, plus the G-GPU kernel ``LaunchQueue``.
+"""Compatibility facade over the ``repro.serve`` package.
 
-LLM side: a fixed decode batch of ``slots``; finished sequences free their
-slot and the next queued request is prefilled into it (its KV written into
-the shared cache at the slot's batch row). Greedy or temperature sampling.
-This is the serve-side driver the decode dry-run cells lower.
+The serving subsystem used to be this single module; it is now a package
+(DESIGN.md §Serving subsystem):
 
-G-GPU side: ``LaunchQueue`` batches simulator kernel launches the same way
-the LLM engine batches decode requests — N same-shape (program, mem-image)
-pairs are padded to a common envelope and ``jax.vmap``-ed over one compiled
-stepper (``repro.ggpu.engine.run_kernel_batch``), so a traffic burst of
-launches costs one dispatch instead of N.
+  * ``serve.request``   — ``Request``/``Result`` model (tickets, tags,
+    priorities, deadlines); ``KernelLaunch`` is the legacy alias.
+  * ``serve.scheduler`` — the continuous-batching core: chunk planner,
+    incremental ``drain(budget)``, per-launch failure quarantine; plus the
+    legacy strict-mode ``LaunchQueue``.
+  * ``serve.executors`` — compiled-executor cache per config (envelope
+    hit accounting, shared with ``repro.dse.Evaluator``).
+  * ``serve.fleet``     — router over multiple ``GGPUConfig`` devices
+    (e.g. a DSE Pareto front).
+  * ``serve.llm``       — the slot-batched LLM ``Engine``.
+
+Everything importable here before the split stays importable here
+(including the ``GGPUConfig``/``KernelLaunchError`` engine re-exports this
+module used to expose as attributes), with identical behavior:
+``from repro.serve.engine import LaunchQueue, Engine`` works,
+``LaunchQueue`` keeps its raise-and-restore flush semantics, and all
+launch paths remain bit-exact per launch. The one deliberate behavior
+change is the prefill-EOS bugfix: a sequence whose *first* generated
+token is ``eos_id`` now stops immediately instead of decoding ``max_new``
+post-EOS tokens.
 """
-from __future__ import annotations
-
-import dataclasses
-from typing import Dict, List, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.ggpu.engine import GGPUConfig, KernelLaunchError
-from repro.ggpu.engine import run_kernel as _ggpu_run_kernel
-from repro.ggpu.engine import run_kernel_batch as _ggpu_run_kernel_batch
-from repro.ggpu.engine import run_kernel_cohort as _ggpu_run_kernel_cohort
-from repro.models import model as M
-from repro.models.config import ModelConfig
-from repro.models.steps import make_decode_step
+from repro.serve.llm import Engine, EngineConfig
+from repro.serve.request import KernelLaunch, Request, Result
+from repro.serve.scheduler import LaunchQueue, Scheduler
 
-
-@dataclasses.dataclass
-class EngineConfig:
-    max_len: int = 256
-    slots: int = 4
-    temperature: float = 0.0
-    eos_id: int = -1              # -1: never stop early
-    seed: int = 0
-
-
-class Engine:
-    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
-        self.cfg, self.params, self.ecfg = cfg, params, ecfg
-        self.decode_fn = jax.jit(make_decode_step(cfg))
-
-    def _sample(self, logits, rng):
-        if self.ecfg.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1)
-        return jax.random.categorical(rng, logits / self.ecfg.temperature,
-                                      axis=-1)
-
-    def generate(self, prompts: List[List[int]], max_new: int
-                 ) -> List[List[int]]:
-        """Slot-batched generation. Prompts are queued; each batch wave
-        prefills up to ``slots`` prompts padded to a common length."""
-        ecfg = self.ecfg
-        results: List[Optional[List[int]]] = [None] * len(prompts)
-        queue = list(range(len(prompts)))
-        rng = jax.random.PRNGKey(ecfg.seed)
-        while queue:
-            wave = queue[:ecfg.slots]
-            queue = queue[ecfg.slots:]
-            plen = max(len(prompts[i]) for i in wave)
-            batch = np.zeros((len(wave), plen), np.int32)
-            for r, i in enumerate(wave):
-                batch[r, plen - len(prompts[i]):] = prompts[i]  # left-pad
-            cap = plen + max_new + 1
-            logits, cache = M.prefill(self.params, self.cfg,
-                                      tokens=jnp.asarray(batch), pad_to=cap)
-            toks = [list(prompts[i]) for i in wave]
-            last = self._sample(logits, rng)
-            done = np.zeros(len(wave), bool)
-            for r in range(len(wave)):
-                toks[r].append(int(last[r]))
-            for t in range(max_new - 1):
-                rng, sub = jax.random.split(rng)
-                logits, cache = self.decode_fn(
-                    self.params, cache, last[:, None],
-                    jnp.asarray(plen + t, jnp.int32))
-                last = self._sample(logits, sub)
-                for r in range(len(wave)):
-                    if not done[r]:
-                        tok = int(last[r])
-                        toks[r].append(tok)
-                        if tok == ecfg.eos_id:
-                            done[r] = True
-                if done.all():
-                    break
-            for r, i in enumerate(wave):
-                results[i] = toks[r]
-        return results  # type: ignore
-
-
-@dataclasses.dataclass
-class KernelLaunch:
-    """One queued G-GPU kernel launch."""
-    prog: np.ndarray
-    mem0: np.ndarray
-    n_items: int
-    tag: str = ""
-
-
-class LaunchQueue:
-    """Multi-kernel launch queue for the G-GPU simulator.
-
-    ``submit`` enqueues a (program, mem-image, n_items) launch and returns
-    a ticket; ``flush`` executes everything queued and returns results in
-    submission order. Launches of the *same kernel* (identical program,
-    item count, and memory shape — the serving-traffic common case) are
-    folded into one **cohort** stepper call, which amortizes the
-    simulator's per-round fixed costs across the whole group; remaining
-    launches with a matching wavefront count share one vmapped batch, and
-    odd shapes fall back to the single-launch path. Groups are chunked at
-    ``max_batch`` and drained deterministically in ticket order (each
-    chunk executes in order of its earliest submission — never in dict or
-    group-iteration order). All three paths are bit-exact per launch.
-    """
-
-    def __init__(self, cfg: GGPUConfig, max_batch: int = 64):
-        if max_batch < 1:
-            raise ValueError("max_batch must be >= 1")
-        self.cfg = cfg
-        self.max_batch = max_batch
-        self._pending: List[KernelLaunch] = []
-
-    def __len__(self) -> int:
-        return len(self._pending)
-
-    def submit(self, prog: np.ndarray, mem0: np.ndarray, n_items: int,
-               tag: str = "") -> int:
-        """Queue a launch; returns its ticket (index into flush() order)."""
-        self._pending.append(
-            KernelLaunch(np.asarray(prog, np.int32),
-                         np.asarray(mem0, np.int32), int(n_items), tag))
-        return len(self._pending) - 1
-
-    def discard(self, ticket: int) -> KernelLaunch:
-        """Remove and return a pending launch by its current ticket (the
-        recovery path after a failed flush: drop the poisoned launch,
-        flush the rest). Later tickets shift down by one."""
-        return self._pending.pop(ticket)
-
-    def _wavefronts(self, n_items: int) -> int:
-        L = self.cfg.wavefront
-        return (n_items + L - 1) // L
-
-    def flush(self) -> List[Tuple[np.ndarray, dict]]:
-        """Run every queued launch; results come back in submission order
-        with the queue's grouping recorded in ``info['batch_size']`` and
-        the submission ``tag`` (if any) in ``info['tag']``. If any launch
-        fails (e.g. hits ``max_steps``), the whole flush raises a
-        ``KernelLaunchError`` naming the poisoned launch's ticket and tag,
-        and every launch is restored to the queue so the caller can
-        ``discard`` that ticket and retry the rest."""
-        pending, self._pending = self._pending, []
-        try:
-            return self._run_all(pending)
-        except BaseException:
-            self._pending = pending + self._pending
-            raise
-
-    def _plan_chunks(self, pending: List[KernelLaunch]
-                     ) -> List[Tuple[str, List[int]]]:
-        """Grouping pass: (kind, tickets) chunks — same-kernel cohorts,
-        same-wavefront vmap batches, singleton fallbacks — ordered by each
-        chunk's first ticket. The drain order is a pure function of the
-        submission order, never of dict/group iteration order."""
-        cohorts: Dict[Tuple, List[int]] = {}
-        for i, kl in enumerate(pending):
-            key = (kl.prog.tobytes(), kl.n_items, kl.mem0.shape[0])
-            cohorts.setdefault(key, []).append(i)
-        chunks: List[Tuple[str, List[int]]] = []
-        stragglers: List[int] = []
-        for members in cohorts.values():
-            if len(members) == 1:
-                stragglers.append(members[0])
-                continue
-            for lo in range(0, len(members), self.max_batch):
-                chunks.append(("cohort", members[lo:lo + self.max_batch]))
-        # stragglers: vmap-batch per wavefront bucket, singles otherwise
-        buckets: Dict[int, List[int]] = {}
-        for i in sorted(stragglers):
-            buckets.setdefault(self._wavefronts(pending[i].n_items),
-                               []).append(i)
-        for members in buckets.values():
-            for lo in range(0, len(members), self.max_batch):
-                chunk = members[lo:lo + self.max_batch]
-                chunks.append(("single" if len(chunk) == 1 else "batch",
-                               chunk))
-        chunks.sort(key=lambda kc: kc[1][0])
-        return chunks
-
-    def _run_all(self, pending: List[KernelLaunch]
-                 ) -> List[Tuple[np.ndarray, dict]]:
-        results: List[Optional[Tuple[np.ndarray, dict]]] = \
-            [None] * len(pending)
-
-        def blame(chunk, exc: KernelLaunchError):
-            """Re-raise a chunk failure naming the submission ticket."""
-            ticket = chunk[exc.index]
-            tag = pending[ticket].tag
-            raise KernelLaunchError(
-                f"launch ticket {ticket}" + (f" (tag {tag!r})" if tag
-                                             else "")
-                + f" hit max_steps without halting; discard({ticket}) "
-                f"and flush() again to retry the rest", ticket) from exc
-
-        for kind, chunk in self._plan_chunks(pending):
-            try:
-                if kind == "cohort":
-                    i0 = chunk[0]
-                    outs = _ggpu_run_kernel_cohort(
-                        pending[i0].prog, [pending[i].mem0 for i in chunk],
-                        pending[i0].n_items, self.cfg)
-                elif kind == "batch":
-                    outs = _ggpu_run_kernel_batch(
-                        [pending[i].prog for i in chunk],
-                        [pending[i].mem0 for i in chunk],
-                        [pending[i].n_items for i in chunk], self.cfg)
-                else:
-                    i = chunk[0]
-                    mem, info = _ggpu_run_kernel(
-                        pending[i].prog, pending[i].mem0,
-                        pending[i].n_items, self.cfg)
-                    info["batch_size"] = 1
-                    outs = [(mem, info)]
-            except KernelLaunchError as exc:
-                blame(chunk, exc)
-            for i, out in zip(chunk, outs):
-                results[i] = out
-        for i, kl in enumerate(pending):
-            if kl.tag:
-                results[i][1]["tag"] = kl.tag
-        return results  # type: ignore[return-value]
+__all__ = [
+    "Engine", "EngineConfig", "GGPUConfig", "KernelLaunch",
+    "KernelLaunchError", "LaunchQueue", "Request", "Result", "Scheduler",
+]

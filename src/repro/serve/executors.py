@@ -1,0 +1,150 @@
+"""Compiled-executor layer: runs planned chunks on one device config.
+
+An ``Executor`` owns the three engine entry points for one ``GGPUConfig``
+and tracks the **envelope cache**: the set of compiled-stepper signatures
+(chunk kind, batch size, wavefront count, program length, memory size,
+opcode set) this process has already traced. The jit cache inside
+``repro.ggpu.engine`` is keyed on exactly these statics, so a chunk whose
+envelope has been seen re-uses the compiled stepper — repeat serving
+traffic never re-traces — and the executor's hit/miss counters make that
+visible (``BENCH_serve.json`` reports the hit rate).
+
+``get_executor`` is a process-wide registry keyed by the **simulation
+key** — the config with ``freq_mhz`` normalized out, since frequency never
+enters the traced cycle computation but is a static jit argument (without
+normalization every distinct frequency target would recompile). The
+registry is shared with ``repro.dse.Evaluator``, whose cycle cache lives
+on the executor (``Executor.memo``): a DSE sweep and a serving fleet that
+touch the same config share both the compiled steppers and the memoized
+bench results.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.ggpu.engine import GGPUConfig
+from repro.ggpu.engine import run_kernel, run_kernel_batch, run_kernel_cohort
+from repro.ggpu.engine.stepper import _n_wavefronts, _static_ops
+
+from repro.serve.request import Request, Result
+
+
+@dataclasses.dataclass
+class ExecutorStats:
+    """Counts *executed* work: a launch re-run after a failed chunk (the
+    LaunchQueue restore-and-retry path, or quarantine survivors) counts
+    each time it actually runs — these are simulator-activity stats, not
+    unique-request stats. hits + misses == dispatches always holds."""
+    launches: int = 0        # kernel launches executed
+    dispatches: int = 0      # compiled-stepper calls issued
+    trace_hits: int = 0      # dispatches whose envelope was already traced
+    trace_misses: int = 0    # dispatches that paid a trace/compile
+
+    @property
+    def batch_occupancy(self) -> float:
+        """Mean launches per dispatch — the continuous-batching win."""
+        return self.launches / self.dispatches if self.dispatches else 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        return (self.trace_hits / self.dispatches) if self.dispatches else 0.0
+
+    def report(self) -> dict:
+        return {
+            "launches": self.launches,
+            "dispatches": self.dispatches,
+            "batch_occupancy": round(self.batch_occupancy, 3),
+            "trace_hits": self.trace_hits,
+            "trace_misses": self.trace_misses,
+            "hit_rate": round(self.hit_rate, 3),
+        }
+
+
+def sim_key(cfg: GGPUConfig) -> GGPUConfig:
+    """Normalize ``freq_mhz`` out of the executor/compile key: frequency
+    scales reported ``time_us`` but never the traced cycle computation."""
+    return dataclasses.replace(cfg, freq_mhz=500.0)
+
+
+class Executor:
+    """Runs (kind, requests) chunks on one config, with envelope-cache
+    accounting and a memo dict shared across its users (see module doc)."""
+
+    def __init__(self, cfg: GGPUConfig):
+        self.cfg = cfg
+        self.stats = ExecutorStats()
+        self.memo: Dict[tuple, object] = {}   # e.g. the DSE cycle cache
+        self._envelopes: set = set()
+
+    # -- envelope accounting ------------------------------------------------
+
+    def _envelope(self, kind: str, reqs: Sequence[Request]) -> tuple:
+        """The static signature the engine jit-caches on for this chunk."""
+        cfg = self.cfg
+        if kind == "cohort":
+            r = reqs[0]
+            return ("cohort", len(reqs), _n_wavefronts(r.n_items, cfg),
+                    r.prog.shape[0], r.mem0.shape[0], _static_ops(r.prog))
+        if kind == "batch":
+            P = max(r.prog.shape[0] for r in reqs)
+            M = max(r.mem0.shape[0] for r in reqs)
+            W = max(_n_wavefronts(r.n_items, cfg) for r in reqs)
+            ops = tuple(sorted(set().union(
+                *(_static_ops(r.prog) for r in reqs))))
+            return ("batch", len(reqs), W, P, M, ops)
+        r = reqs[0]
+        return ("single", _n_wavefronts(r.n_items, cfg), r.prog.shape[0],
+                r.mem0.shape[0], _static_ops(r.prog))
+
+    # -- execution ----------------------------------------------------------
+
+    def run(self, kind: str, reqs: Sequence[Request]) -> List[Result]:
+        """Execute one planned chunk; returns per-launch ``Result``s in the
+        chunk's own order. Raises ``KernelLaunchError`` (with ``index``
+        naming the failing position) when a launch does not halt."""
+        if len(reqs) == 1:
+            kind = "single"          # a degenerate chunk needs no folding
+        env = self._envelope(kind, reqs)
+        traced = env in self._envelopes
+        if kind == "cohort":
+            outs = run_kernel_cohort(reqs[0].prog, [r.mem0 for r in reqs],
+                                     reqs[0].n_items, self.cfg)
+        elif kind == "batch":
+            outs = run_kernel_batch([r.prog for r in reqs],
+                                    [r.mem0 for r in reqs],
+                                    [r.n_items for r in reqs], self.cfg)
+        else:
+            mem, info = run_kernel(reqs[0].prog, reqs[0].mem0,
+                                   reqs[0].n_items, self.cfg)
+            info["batch_size"] = 1
+            outs = [(mem, info)]
+        # stats (including the hit/miss split) count successful dispatches
+        # only: a chunk that raises is retried with fewer members (a
+        # different envelope), so counting it would break the
+        # hits + misses == dispatches invariant
+        self._envelopes.add(env)
+        if traced:
+            self.stats.trace_hits += 1
+        else:
+            self.stats.trace_misses += 1
+        self.stats.launches += len(reqs)
+        self.stats.dispatches += 1
+        return [Result(mem, info) for mem, info in outs]
+
+
+# -- process-wide registry (shared with repro.dse.Evaluator) ----------------
+
+_EXECUTORS: Dict[GGPUConfig, Executor] = {}
+
+
+def get_executor(cfg: GGPUConfig) -> Executor:
+    """The shared executor for ``cfg``'s simulation key. Callers that need
+    frequency-faithful ``info['time_us']`` (e.g. fleet devices) should hold
+    their own ``Executor(cfg)`` instead and restate nothing."""
+    key = sim_key(cfg)
+    if key not in _EXECUTORS:
+        _EXECUTORS[key] = Executor(key)
+    return _EXECUTORS[key]

@@ -1,0 +1,165 @@
+"""Fleet router: serve one launch stream across *multiple* G-GPU configs.
+
+This is the layer that connects the DSE output to the serving path: the
+Pareto front ``repro.dse.search`` emits is a set of complementary designs
+(e.g. a small high-clock 1-CU part and a wide derated 8-CU part), and a
+mixed traffic trace is served fastest by placing each launch on the device
+that finishes it earliest — small single-wavefront launches on the fast
+small part, wide launches on the wide one.
+
+Placement is greedy earliest-finish-time: for each request the router
+estimates its service time on every device — from the learned per-kernel
+cycle model once the device has served that kernel, from an analytic
+occupancy proxy (wavefront rounds / CU parallelism, scaled by clock) on a
+cold start — and picks the device minimizing (modeled queue backlog +
+estimated service time). Modeled wall-clock of a fleet is the makespan:
+the max over devices of the sum of served launch times (devices run in
+parallel); ``pinned_makespan`` prices the whole trace on one config for
+comparison. ``benchmarks/serve_bench.py`` records the routed-vs-pinned
+comparison in ``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.ggpu.engine import GGPUConfig
+from repro.serve.request import Request, Result
+from repro.serve.scheduler import Quarantined, Scheduler, wavefronts
+
+
+@dataclasses.dataclass
+class FleetDevice:
+    """One config in the fleet, with its scheduler and load accounting."""
+    name: str
+    cfg: GGPUConfig
+    scheduler: Scheduler
+    eta_us: float = 0.0        # modeled backlog the router sees (estimates)
+    busy_us: float = 0.0       # actual modeled service time after drain
+
+
+class Fleet:
+    """Routes submissions across devices; drains every device's scheduler.
+
+    ``configs`` may be raw ``GGPUConfig``s or (name, config) pairs —
+    e.g. ``[(p.label(), p.config) for p in search_result.frontier]``.
+    """
+
+    def __init__(self, configs: Sequence, max_batch: int = 64):
+        self.devices: List[FleetDevice] = []
+        for i, c in enumerate(configs):
+            name, cfg = c if isinstance(c, tuple) else (f"dev{i}", c)
+            self.devices.append(FleetDevice(
+                name, cfg, Scheduler(cfg, max_batch=max_batch)))
+        if len(self.devices) < 1:
+            raise ValueError("fleet needs at least one device")
+        names = [d.name for d in self.devices]
+        if len(set(names)) != len(names):
+            raise ValueError(f"fleet device names must be unique: {names}"
+                             " (names key the routing and result maps)")
+        # learned service times: (device name, kernel key) -> time_us
+        self._learned: Dict[Tuple[str, tuple], float] = {}
+        self.placement: Dict[int, str] = {}     # fleet ticket -> device name
+        self._next_ticket = 0
+        self._tickets: Dict[Tuple[str, int], int] = {}  # (dev, local) -> fleet
+        self._kernel_keys: Dict[int, tuple] = {}        # fleet -> kernel key
+        self._eta_charged: Dict[int, float] = {}        # fleet -> estimate
+        self.quarantined: Dict[int, Quarantined] = {}   # by fleet ticket
+
+    # -- service-time model --------------------------------------------------
+
+    def estimate_us(self, dev: FleetDevice, req: Request) -> float:
+        """Expected service time of ``req`` on ``dev``: the learned value
+        when this device has served this kernel, else an occupancy proxy —
+        each of the kernel's ``W`` wavefronts issues its program once over
+        ``n_cus``-way CU parallelism at the device's clock."""
+        learned = self._learned.get((dev.name, req.kernel_key()))
+        if learned is not None:
+            return learned
+        W = wavefronts(req.n_items, dev.cfg)
+        rounds = math.ceil(W / dev.cfg.n_cus) * req.prog.shape[0]
+        return rounds * dev.cfg.issue_cycles / dev.cfg.freq_mhz
+
+    # -- routing -------------------------------------------------------------
+
+    def submit(self, prog: np.ndarray, mem0: np.ndarray, n_items: int,
+               tag: str = "", priority: int = 0,
+               deadline_us: float = math.inf) -> int:
+        """Route a launch to the device with the earliest modeled finish
+        time; returns a fleet-level ticket."""
+        req = Request(prog, mem0, n_items, tag, priority, deadline_us)
+        dev = min(self.devices,
+                  key=lambda d: d.eta_us + self.estimate_us(d, req))
+        est = self.estimate_us(dev, req)
+        local = dev.scheduler.submit_request(req)
+        dev.eta_us += est
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self.placement[ticket] = dev.name
+        self._tickets[(dev.name, local)] = ticket
+        self._kernel_keys[ticket] = req.kernel_key()
+        self._eta_charged[ticket] = est
+        return ticket
+
+    def drain(self, budget: Optional[int] = None) -> List[Result]:
+        """Drain every device (``budget`` applies per device); returns the
+        completed results in fleet-ticket order, each stamped with
+        ``info['device']`` and the fleet ``info['ticket']``. Actual
+        service times update the device loads (replacing the estimate the
+        router charged at submit time, so cold-start error never skews
+        later placements) and the learned per-kernel model. Launches the
+        device scheduler quarantined surface in ``Fleet.quarantined``
+        under their fleet ticket — they produce no result."""
+        out: List[Result] = []
+        for dev in self.devices:
+            for res in dev.scheduler.drain(budget):
+                local = res.info["ticket"]
+                t_us = res.info["cycles"] / dev.cfg.freq_mhz
+                dev.busy_us += t_us
+                res.info["device"] = dev.name
+                ticket = self._tickets[(dev.name, local)]
+                res.info["ticket"] = ticket
+                self._learned[(dev.name, self._kernel_keys[ticket])] = t_us
+                # reconcile the modeled backlog with the actual time
+                dev.eta_us += t_us - self._eta_charged.pop(ticket, t_us)
+                out.append(res)
+            for local, q in dev.scheduler.quarantined.items():
+                ticket = self._tickets[(dev.name, local)]
+                if ticket not in self.quarantined:
+                    self.quarantined[ticket] = q
+                    dev.eta_us -= self._eta_charged.pop(ticket, 0.0)
+        out.sort(key=lambda r: r.info["ticket"])
+        return out
+
+    def makespan_us(self) -> float:
+        """Modeled fleet wall-clock: devices serve in parallel, so the
+        slowest device's total service time bounds the trace."""
+        return max(d.busy_us for d in self.devices)
+
+    def report(self) -> dict:
+        counts: Dict[str, int] = {d.name: 0 for d in self.devices}
+        for name in self.placement.values():
+            counts[name] += 1
+        return {
+            "devices": [d.name for d in self.devices],
+            "placement": counts,
+            "busy_us": {d.name: round(d.busy_us, 3) for d in self.devices},
+            "makespan_us": round(self.makespan_us(), 3),
+            "quarantined": sorted(self.quarantined),
+        }
+
+
+def pinned_makespan(cfg: GGPUConfig,
+                    trace: Sequence[Tuple[np.ndarray, np.ndarray, int]],
+                    max_batch: int = 64) -> float:
+    """Modeled wall-clock of serving the whole ``trace`` (an iterable of
+    (prog, mem0, n_items)) pinned to one config: the sum of per-launch
+    service times on that device."""
+    sched = Scheduler(cfg, max_batch=max_batch)
+    for prog, mem0, n_items in trace:
+        sched.submit(prog, mem0, n_items)
+    results = sched.flush()
+    return sum(r.info["cycles"] / cfg.freq_mhz for r in results)

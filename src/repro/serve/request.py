@@ -1,0 +1,61 @@
+"""Request/Result model for the serving subsystem.
+
+A ``Request`` is one queued G-GPU kernel launch plus its serving metadata:
+the ``tag`` a caller uses to correlate results, a ``priority`` (higher
+drains earlier), and an optional modeled-time ``deadline_us`` used as a
+tie-breaker (earliest-deadline-first within a priority class). The
+``ticket`` identifies the request within its scheduler and orders results.
+
+``KernelLaunch`` is the pre-package name of this class and remains as an
+alias for compatibility (``repro.serve.engine`` re-exports it); the extra
+fields all default, so positional ``KernelLaunch(prog, mem0, n_items,
+tag)`` construction is unchanged.
+
+``Result`` is a (mem, info) named tuple — exactly the pair the engine's
+``run_kernel`` returns, so code that unpacks ``mem, info = result`` keeps
+working. The serving layer adds ``info["ticket"]``, ``info["batch_size"]``
+(how many launches shared the dispatch) and ``info["tag"]`` (when set).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One queued G-GPU kernel launch with serving metadata."""
+    prog: np.ndarray
+    mem0: np.ndarray
+    n_items: int
+    tag: str = ""
+    priority: int = 0            # higher drains earlier
+    deadline_us: float = math.inf  # modeled-time deadline (EDF tie-break)
+    ticket: int = -1             # assigned by the scheduler at submit
+
+    def __post_init__(self):
+        self.prog = np.asarray(self.prog, np.int32)
+        self.mem0 = np.asarray(self.mem0, np.int32)
+        self.n_items = int(self.n_items)
+
+    def kernel_key(self) -> tuple:
+        """Same-kernel identity: launches sharing this key fold into one
+        cohort stepper call (program, item count, memory shape)."""
+        return (self.prog.tobytes(), self.n_items, self.mem0.shape[0])
+
+
+# compatibility alias: the pre-package launch record
+KernelLaunch = Request
+
+
+class Result(NamedTuple):
+    """One completed launch: final memory image + the engine info dict."""
+    mem: np.ndarray
+    info: dict
+
+    @property
+    def ticket(self) -> int:
+        return self.info.get("ticket", -1)

@@ -1,0 +1,318 @@
+"""Continuous-batching scheduler: admission, chunk planning, incremental
+drain, and per-launch failure quarantine.
+
+The **chunk planner** (``plan_chunks``) is the grouping pass both tenants
+of the serving core share: launches of the *same kernel* (identical
+program, item count, memory shape) fold into one **cohort** stepper call;
+remaining launches with a matching wavefront count share one vmapped
+**batch**; odd shapes fall back to **single** dispatch. Groups are chunked
+at ``max_batch`` and ordered by (priority desc, deadline asc, earliest
+ticket) — with default metadata that is exactly the legacy first-ticket
+order, a pure function of the submission sequence.
+
+The ``Scheduler`` is the continuous-batching core. ``submit`` admits a
+request (optionally bounded by ``max_pending``) and returns a monotonic
+ticket; ``drain(budget)`` plans over *everything currently pending* and
+executes chunks until ``budget`` launches have been served, so new
+submissions interleave with in-flight work instead of waiting for a full
+flush. A launch that fails (hits ``max_steps``) is moved to
+``quarantined`` — its chunk's survivors are re-run and still complete in
+the same drain; nothing is aborted and nothing must be manually discarded.
+
+``LaunchQueue`` remains the pre-package interface with its original
+strict semantics (whole-flush raise + restore on failure); see the class
+docstring. New code should use ``Scheduler``/``Fleet`` directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.ggpu.engine import GGPUConfig, KernelLaunchError
+from repro.serve.executors import Executor
+from repro.serve.request import Request, Result
+
+
+class AdmissionError(RuntimeError):
+    """The scheduler's pending set is full (``max_pending`` reached)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Chunk:
+    """One planned dispatch: ``kind`` in {cohort, batch, single}, and the
+    member positions into the planner's input sequence."""
+    kind: str
+    members: Tuple[int, ...]
+
+
+def wavefronts(n_items: int, cfg: GGPUConfig) -> int:
+    """Raw wavefront count — the planner's bucket key (and the fleet's
+    occupancy proxy). Deliberately NOT the engine's ``_n_wavefronts``:
+    that also rounds W up for ragged CU residency, which is a
+    machine-shape concern — the executor's envelope keys use it — while
+    grouping here must match the legacy plan exactly."""
+    L = cfg.wavefront
+    return (n_items + L - 1) // L
+
+
+def plan_chunks(requests: Sequence[Request], cfg: GGPUConfig,
+                max_batch: int = 64) -> List[Chunk]:
+    """Grouping pass over a request sequence (see module doc). Member
+    indices are positions into ``requests``; the chunk order is a pure
+    function of the submission order and the requests' metadata, never of
+    dict/group iteration order."""
+    cohorts: Dict[tuple, List[int]] = {}
+    for i, r in enumerate(requests):
+        cohorts.setdefault(r.kernel_key(), []).append(i)
+    chunks: List[Chunk] = []
+    stragglers: List[int] = []
+    for members in cohorts.values():
+        if len(members) == 1:
+            stragglers.append(members[0])
+            continue
+        for lo in range(0, len(members), max_batch):
+            chunks.append(Chunk("cohort", tuple(members[lo:lo + max_batch])))
+    # stragglers: vmap-batch per wavefront bucket, singles otherwise
+    buckets: Dict[int, List[int]] = {}
+    for i in sorted(stragglers):
+        buckets.setdefault(wavefronts(requests[i].n_items, cfg), []).append(i)
+    for members in buckets.values():
+        for lo in range(0, len(members), max_batch):
+            chunk = members[lo:lo + max_batch]
+            chunks.append(Chunk("single" if len(chunk) == 1 else "batch",
+                                tuple(chunk)))
+
+    def order(c: Chunk):
+        prio = max(requests[i].priority for i in c.members)
+        deadline = min(requests[i].deadline_us for i in c.members)
+        return (-prio, deadline, c.members[0])
+
+    chunks.sort(key=order)
+    return chunks
+
+
+def plan_waves(tickets: Sequence[int], slots: int) -> List[List[int]]:
+    """FIFO slot-wave admission: waves of at most ``slots`` tickets. The
+    slot accounting shared by the LLM engine (decode slots) and callers
+    that meter kernel submission."""
+    if slots < 1:
+        raise ValueError("slots must be >= 1")
+    tickets = list(tickets)
+    return [tickets[i:i + slots] for i in range(0, len(tickets), slots)]
+
+
+@dataclasses.dataclass
+class Quarantined:
+    """A poisoned launch isolated by the scheduler, with its error."""
+    request: Request
+    error: KernelLaunchError
+
+
+class Scheduler:
+    """The continuous-batching core (see module doc).
+
+    Construct from a config (the scheduler owns a private ``Executor``) or
+    hand it a shared one (e.g. ``executors.get_executor`` — how the DSE
+    evaluator and a serving fleet share compiled steppers)."""
+
+    def __init__(self, cfg: Optional[GGPUConfig] = None, *,
+                 executor: Optional[Executor] = None, max_batch: int = 64,
+                 max_pending: Optional[int] = None):
+        if (cfg is None) == (executor is None):
+            raise ValueError("pass exactly one of cfg or executor")
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.executor = executor if executor is not None else Executor(cfg)
+        self.cfg = self.executor.cfg
+        self.max_batch = max_batch
+        self.max_pending = max_pending
+        self._pending: Dict[int, Request] = {}   # ticket -> request (FIFO)
+        self._next_ticket = 0
+        self.quarantined: Dict[int, Quarantined] = {}
+        self._completed: List[Result] = []       # buffered across failures
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    @property
+    def pending_tickets(self) -> List[int]:
+        return list(self._pending)
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, prog: np.ndarray, mem0: np.ndarray, n_items: int,
+               tag: str = "", priority: int = 0,
+               deadline_us: float = math.inf) -> int:
+        """Admit a launch; returns its (monotonic) ticket."""
+        return self.submit_request(Request(prog, mem0, n_items, tag,
+                                           priority, deadline_us))
+
+    def submit_request(self, req: Request) -> int:
+        if self.max_pending is not None \
+                and len(self._pending) >= self.max_pending:
+            raise AdmissionError(
+                f"scheduler full: {len(self._pending)} pending "
+                f"(max_pending={self.max_pending})")
+        req.ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending[req.ticket] = req
+        return req.ticket
+
+    def cancel(self, ticket: int) -> Request:
+        """Remove a still-pending request by ticket."""
+        return self._pending.pop(ticket)
+
+    # -- drain --------------------------------------------------------------
+
+    def drain(self, budget: Optional[int] = None) -> List[Result]:
+        """Serve pending work: plan chunks over the current pending set and
+        execute them in planned order until ``budget`` launches have been
+        taken off the queue (``None``: everything). Returns the completed
+        ``Result``s of this call in ticket order; poisoned launches land in
+        ``quarantined`` (they count against the budget but produce no
+        result). Per-launch results are bit-exact with direct
+        ``run_kernel`` regardless of how submissions interleave with
+        drains.
+
+        Unexpected failures (anything other than a launch hitting
+        ``max_steps``) propagate, but lose no work: requests leave
+        ``_pending`` only when they complete or are quarantined, and
+        completed results are buffered on the scheduler until a drain
+        returns — so after an interrupt or a malformed launch, the next
+        ``drain`` resumes with everything still queued plus the results
+        already computed."""
+        items = list(self._pending.values())
+        chunks = plan_chunks(items, self.cfg, self.max_batch)
+        taken = 0
+        for chunk in chunks:
+            if budget is not None and taken >= budget:
+                break
+            reqs = [items[i] for i in chunk.members]
+            taken += len(reqs)
+            self._completed.extend(
+                self._run_quarantining(chunk.kind, list(reqs)))
+        out, self._completed = self._completed, []
+        out.sort(key=lambda r: r.info["ticket"])
+        return out
+
+    def flush(self) -> List[Result]:
+        """Monolithic drain of everything pending."""
+        return self.drain()
+
+    def _run_quarantining(self, kind: str, reqs: List[Request]
+                          ) -> List[Result]:
+        """Execute one chunk; on failure isolate the blamed launch into
+        ``quarantined`` and re-run the survivors until the chunk completes.
+        Survivor results stay bit-exact: cohort/batch folding is per-launch
+        exact at any membership."""
+        out: List[Result] = []
+        while reqs:
+            try:
+                results = self.executor.run(kind, reqs)
+            except KernelLaunchError as exc:
+                bad = reqs.pop(exc.index)
+                del self._pending[bad.ticket]
+                self.quarantined[bad.ticket] = Quarantined(bad, exc)
+                continue
+            for req, res in zip(reqs, results):
+                res.info["ticket"] = req.ticket
+                if req.tag:
+                    res.info["tag"] = req.tag
+                del self._pending[req.ticket]
+                out.append(res)
+            return out
+        return out
+
+
+class LaunchQueue:
+    """Multi-kernel launch queue for the G-GPU simulator (the pre-package
+    interface, bit-exact compatible).
+
+    ``submit`` enqueues a (program, mem-image, n_items) launch and returns
+    a ticket; ``flush`` executes everything queued and returns results in
+    submission order. Launches of the *same kernel* (identical program,
+    item count, and memory shape — the serving-traffic common case) are
+    folded into one **cohort** stepper call, which amortizes the
+    simulator's per-round fixed costs across the whole group; remaining
+    launches with a matching wavefront count share one vmapped batch, and
+    odd shapes fall back to the single-launch path. Groups are chunked at
+    ``max_batch`` and drained deterministically in ticket order (each
+    chunk executes in order of its earliest submission — never in dict or
+    group-iteration order). All three paths are bit-exact per launch.
+
+    Failure semantics are the legacy strict mode: if any launch fails
+    (e.g. hits ``max_steps``), the whole flush raises a
+    ``KernelLaunchError`` naming the poisoned launch's ticket and tag, and
+    every launch is restored to the queue so the caller can ``discard``
+    that ticket and retry the rest. ``Scheduler`` supersedes this with
+    per-launch quarantine and incremental ``drain``.
+    """
+
+    def __init__(self, cfg: GGPUConfig, max_batch: int = 64):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.executor = Executor(cfg)
+        self._pending: List[Request] = []
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def submit(self, prog: np.ndarray, mem0: np.ndarray, n_items: int,
+               tag: str = "") -> int:
+        """Queue a launch; returns its ticket (index into flush() order)."""
+        self._pending.append(Request(prog, mem0, n_items, tag))
+        return len(self._pending) - 1
+
+    def discard(self, ticket: int) -> Request:
+        """Remove and return a pending launch by its current ticket (the
+        recovery path after a failed flush: drop the poisoned launch,
+        flush the rest). Later tickets shift down by one."""
+        return self._pending.pop(ticket)
+
+    def _plan_chunks(self, pending: List[Request]
+                     ) -> List[Tuple[str, List[int]]]:
+        """Legacy-shaped view of the shared planner (kind, tickets)."""
+        return [(c.kind, list(c.members))
+                for c in plan_chunks(pending, self.cfg, self.max_batch)]
+
+    def flush(self) -> List[Result]:
+        """Run every queued launch; results come back in submission order
+        with the queue's grouping recorded in ``info['batch_size']`` and
+        the submission ``tag`` (if any) in ``info['tag']``."""
+        pending, self._pending = self._pending, []
+        try:
+            return self._run_all(pending)
+        except BaseException:
+            self._pending = pending + self._pending
+            raise
+
+    def _run_all(self, pending: List[Request]) -> List[Result]:
+        results: List[Optional[Result]] = [None] * len(pending)
+
+        def blame(chunk, exc: KernelLaunchError):
+            """Re-raise a chunk failure naming the submission ticket."""
+            ticket = chunk[exc.index]
+            tag = pending[ticket].tag
+            raise KernelLaunchError(
+                f"launch ticket {ticket}" + (f" (tag {tag!r})" if tag
+                                             else "")
+                + f" hit max_steps without halting; discard({ticket}) "
+                f"and flush() again to retry the rest", ticket) from exc
+
+        for kind, chunk in self._plan_chunks(pending):
+            try:
+                outs = self.executor.run(kind, [pending[i] for i in chunk])
+            except KernelLaunchError as exc:
+                blame(chunk, exc)
+            for i, out in zip(chunk, outs):
+                results[i] = out
+        for i, req in enumerate(pending):
+            results[i].info["ticket"] = i
+            if req.tag:
+                results[i].info["tag"] = req.tag
+        return results  # type: ignore[return-value]

@@ -32,6 +32,8 @@ BENCH_BUILDERS = {
     "div_int": lambda: programs._div_int(16, 512),
     "xcorr": lambda: programs._xcorr(16, 512),
     "parallel_sel": lambda: programs._parallel_sel(32, 512),
+    # the PR-3 extension bench (seg=8 keeps gpu_items=512 -> W=8)
+    "reduction": lambda: programs._reduction(64, 4096, seg=8),
 }
 MACHINES = ["scalar", 2] if FAST else ["scalar", 1, 2, 4, 8]
 
@@ -213,12 +215,43 @@ def test_search_points_are_consistent():
 def test_evaluator_caches_configs():
     """Re-evaluating the same sweep must not simulate anything new, and
     config-sharing points (same depth from different freq targets) share
-    cache entries."""
+    cache entries (memoized on the shared serve executors)."""
     res, ev = _search_result()
-    n_cached = len(ev._cache)
+    n_cached = ev.cache_size()
     ev.evaluate([p.point for p in res.points])
-    assert len(ev._cache) == n_cached
+    assert ev.cache_size() == n_cached
     assert n_cached < 2 * len(res.points)     # folding actually happened
+
+
+def test_evaluator_shares_executor_cycle_cache():
+    """Two evaluators with identical bench content share the memo on the
+    process-wide executor: the second evaluation dispatches nothing."""
+    from repro.serve.executors import get_executor
+    cfg = GGPUConfig(n_cus=2)
+    ev1 = Evaluator(benches=("copy",), sizes={"copy": (16, 128)})
+    info1, _ = ev1.cycles(cfg, "copy")
+    dispatches = get_executor(cfg).stats.dispatches
+    ev2 = Evaluator(benches=("copy",), sizes={"copy": (16, 128)})
+    info2, _ = ev2.cycles(cfg, "copy")
+    assert get_executor(cfg).stats.dispatches == dispatches
+    assert info2["cycles"] == info1["cycles"]
+
+
+def test_evaluator_check_reverifies_despite_shared_memo():
+    """check=True must actually verify results even when an unchecked
+    evaluator already memoized the bench on the shared executor (it
+    re-simulates once, then trusts its own verification)."""
+    from repro.serve.executors import get_executor
+    cfg = GGPUConfig(n_cus=2)
+    ev1 = Evaluator(benches=("vec_mul",), sizes={"vec_mul": (16, 128)})
+    ev1.cycles(cfg, "vec_mul")
+    d0 = get_executor(cfg).stats.dispatches
+    ev2 = Evaluator(benches=("vec_mul",), sizes={"vec_mul": (16, 128)},
+                    check=True)
+    ev2.cycles(cfg, "vec_mul")
+    assert get_executor(cfg).stats.dispatches == d0 + 1   # re-simulated
+    ev2.cycles(cfg, "vec_mul")                            # now verified
+    assert get_executor(cfg).stats.dispatches == d0 + 1
 
 
 def test_artifact_schema(tmp_path):

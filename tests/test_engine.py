@@ -220,7 +220,7 @@ def test_launch_queue_drains_in_ticket_order(monkeypatch):
     a pure function of submission order — not by cohort-dict/group
     iteration order (which used to run all cohorts before any batch or
     singleton, regardless of when they were submitted)."""
-    import repro.serve.engine as se
+    import repro.serve.executors as sx
     order = []
 
     def spy(name, fn):
@@ -229,12 +229,11 @@ def test_launch_queue_drains_in_ticket_order(monkeypatch):
             return fn(*args, **kw)
         return wrapper
 
-    monkeypatch.setattr(se, "_ggpu_run_kernel",
-                        spy("single", se._ggpu_run_kernel))
-    monkeypatch.setattr(se, "_ggpu_run_kernel_cohort",
-                        spy("cohort", se._ggpu_run_kernel_cohort))
-    monkeypatch.setattr(se, "_ggpu_run_kernel_batch",
-                        spy("batch", se._ggpu_run_kernel_batch))
+    monkeypatch.setattr(sx, "run_kernel", spy("single", sx.run_kernel))
+    monkeypatch.setattr(sx, "run_kernel_cohort",
+                        spy("cohort", sx.run_kernel_cohort))
+    monkeypatch.setattr(sx, "run_kernel_batch",
+                        spy("batch", sx.run_kernel_batch))
 
     cfg = GGPUConfig(n_cus=2)
     q = LaunchQueue(cfg)

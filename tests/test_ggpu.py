@@ -19,7 +19,8 @@ from repro.ggpu.machine import GGPUConfig, ScalarConfig, run_kernel
 from repro.ggpu.programs import all_benches
 
 FAST = os.environ.get("GGPU_FAST_TESTS", "0") not in ("", "0")
-FAST_TESTS = ["copy", "vec_mul", "div_int", "mat_mul", "fir", "parallel_sel"]
+FAST_TESTS = ["copy", "vec_mul", "div_int", "mat_mul", "fir", "parallel_sel",
+              "reduction"]
 
 
 @functools.lru_cache(maxsize=1)
@@ -34,7 +35,7 @@ def _correctness_benches():
     small = [programs._mat_mul(8, 32), programs._copy(128, 4096),
              programs._vec_mul(128, 8192), programs._fir(32, 1024),
              programs._div_int(64, 1024), programs._xcorr(32, 256),
-             programs._parallel_sel(32, 512)]
+             programs._parallel_sel(32, 512), programs._reduction(256, 4096)]
     return {b.name: b for b in small}
 
 
