@@ -1,0 +1,172 @@
+"""Perf-regression gate: compare fresh bench artifacts against baselines.
+
+CI runs the ``dse-smoke`` / ``serve-smoke`` jobs, then::
+
+    python -m benchmarks.check_bench BENCH_dse.json \
+        benchmarks/baselines/BENCH_dse.json
+
+and fails the build on any violation, so a perf regression breaks CI
+instead of uploading quietly. The artifact kind is auto-detected from the
+``schema`` field (``ggpu-dse/1`` / ``ggpu-serve/1``).
+
+Tolerance bands per metric class:
+
+  * **exact** — simulator cycle counts, Pareto frontier membership,
+    batch occupancy, executor cache hit rate, and the
+    ``beats_both_pins`` routing invariant. These are deterministic
+    functions of the committed code; any drift is a real behavior change.
+  * **modeled time, ±25 % (``--tol``)** — modeled wall-clock/throughput
+    derived as cycles/fmax (``time_us``, ``makespan_us``,
+    ``pinned_us``). Deterministic too, but banded so intentional small
+    model changes (e.g. a new PPA coefficient) need only a baseline
+    refresh, not a same-commit lockstep.
+  * **host wall-clock, ×4 band (``--host-tol``)** — raw machine timings
+    (``launches_per_sec``, ``wall_s``, ``sim_wall_s``). These measure the
+    *simulator's* speed on whatever runner executed the job; across
+    runner generations they legitimately vary far beyond the modeled-time
+    band, so the default band is a generous ratio. Tighten with
+    ``--host-tol 0.25`` when baselines are produced on pinned hardware.
+
+Library use: ``check_artifacts(fresh, baseline, ...) -> [violations]``
+(see ``tests/test_check_bench.py``, which demonstrates that an injected
+cycle regression fails the gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+DSE_SCHEMA = "ggpu-dse/1"
+SERVE_SCHEMA = "ggpu-serve/1"
+
+
+def _band(violations: List[str], name: str, fresh, base, tol: float):
+    """Relative band check: |fresh - base| <= tol * |base|."""
+    if base is None or fresh is None:
+        violations.append(f"{name}: missing (fresh={fresh}, base={base})")
+        return
+    if base == 0:
+        if fresh != 0:
+            violations.append(f"{name}: baseline 0, fresh {fresh}")
+        return
+    rel = abs(fresh - base) / abs(base)
+    if rel > tol:
+        violations.append(
+            f"{name}: {fresh} vs baseline {base} "
+            f"({rel * 100:.1f}% > {tol * 100:.0f}% band)")
+
+
+def _ratio_band(violations: List[str], name: str, fresh, base,
+                tol: float):
+    """Symmetric ratio band for host wall-clock metrics: fails when the
+    fresh value is more than (1 + tol)x the baseline in either direction
+    (a plain relative band can never flag a slowdown beyond -100%)."""
+    if base is None or fresh is None:
+        violations.append(f"{name}: missing (fresh={fresh}, base={base})")
+        return
+    if base <= 0 or fresh <= 0:
+        if fresh != base:
+            violations.append(f"{name}: {fresh} vs baseline {base}")
+        return
+    ratio = max(fresh / base, base / fresh)
+    if ratio > 1 + tol:
+        violations.append(
+            f"{name}: {fresh} vs baseline {base} "
+            f"({ratio:.2f}x > {1 + tol:.2f}x band)")
+
+
+def _exact(violations: List[str], name: str, fresh, base):
+    if fresh != base:
+        violations.append(f"{name}: {fresh!r} != baseline {base!r}")
+
+
+def check_dse(fresh: dict, base: dict, tol: float,
+              host_tol: float) -> List[str]:
+    v: List[str] = []
+    _exact(v, "schema", fresh.get("schema"), base.get("schema"))
+    fb, bb = fresh.get("benches", {}), base.get("benches", {})
+    _exact(v, "bench set", sorted(fb), sorted(bb))
+    for name in sorted(set(fb) & set(bb)):
+        _exact(v, f"benches.{name}.cycles", fb[name].get("cycles"),
+               bb[name].get("cycles"))
+        _band(v, f"benches.{name}.time_us", fb[name].get("time_us"),
+              bb[name].get("time_us"), tol)
+        _ratio_band(v, f"benches.{name}.sim_wall_s",
+                    fb[name].get("sim_wall_s"),
+                    bb[name].get("sim_wall_s"), host_tol)
+    for key in ("frontier", "analytic_frontier", "excluded_analytic"):
+        _exact(v, key, sorted(fresh.get(key, [])),
+               sorted(base.get(key, [])))
+    return v
+
+
+def check_serve(fresh: dict, base: dict, tol: float,
+                host_tol: float) -> List[str]:
+    from benchmarks.serve_bench import invariant_problems
+
+    v: List[str] = []
+    _exact(v, "schema", fresh.get("schema"), base.get("schema"))
+    # absolute health invariants: one definition, shared with the
+    # benchmark harness's own exit-code check (benchmarks.run --serve)
+    v += invariant_problems(fresh)
+    _exact(v, "batch_occupancy", fresh.get("batch_occupancy"),
+           base.get("batch_occupancy"))
+    _exact(v, "cache_hit_rate", fresh.get("cache_hit_rate"),
+           base.get("cache_hit_rate"))
+    _band(v, "fleet.makespan_us", fresh.get("fleet", {}).get("makespan_us"),
+          base.get("fleet", {}).get("makespan_us"), tol)
+    fp = fresh.get("fleet", {}).get("pinned_us", {})
+    bp = base.get("fleet", {}).get("pinned_us", {})
+    _exact(v, "fleet.pinned device set", sorted(fp), sorted(bp))
+    for dev in sorted(set(fp) & set(bp)):
+        _band(v, f"fleet.pinned_us.{dev}", fp[dev], bp[dev], tol)
+    _ratio_band(v, "launches_per_sec", fresh.get("launches_per_sec"),
+                base.get("launches_per_sec"), host_tol)
+    return v
+
+
+def check_artifacts(fresh: dict, base: dict, tol: float = 0.25,
+                    host_tol: float = 3.0) -> List[str]:
+    """All violations of ``fresh`` against ``base`` (empty = gate passes).
+    """
+    schema = base.get("schema")
+    if schema == DSE_SCHEMA:
+        return check_dse(fresh, base, tol, host_tol)
+    if schema == SERVE_SCHEMA:
+        return check_serve(fresh, base, tol, host_tol)
+    return [f"unknown baseline schema {schema!r}"]
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Fail when a fresh bench artifact regresses vs its "
+                    "committed baseline.")
+    ap.add_argument("fresh", help="freshly produced artifact (JSON)")
+    ap.add_argument("baseline", help="committed baseline artifact (JSON)")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="relative band for modeled wall-clock metrics "
+                         "(default 0.25)")
+    ap.add_argument("--host-tol", type=float, default=3.0,
+                    help="relative band for raw host wall-clock metrics "
+                         "(default 3.0 — simulator speed varies across "
+                         "runners)")
+    args = ap.parse_args(argv)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    violations = check_artifacts(fresh, base, args.tol, args.host_tol)
+    if violations:
+        print(f"{len(violations)} bench regression(s) vs {args.baseline}:",
+              file=sys.stderr)
+        for v in violations:
+            print(f"  - {v}", file=sys.stderr)
+        return 1
+    print(f"bench gate OK: {args.fresh} within bands of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

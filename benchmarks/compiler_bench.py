@@ -1,0 +1,143 @@
+"""Compiler sweep (``python -m benchmarks.run --compiler``).
+
+Exercises the tensor-expression DSL end to end:
+
+  * **suite parity** — compiles the eight bench kernels, runs each against
+    its hand-written twin on one engine config, and reports the cycle
+    ratio (cycle-identical for everything except the branch-free
+    ``parallel_sel``, see ``repro.compiler.suite``); every compiled
+    result is differentially checked against both the hand-written NumPy
+    reference and the compiler's own oracle.
+  * **generated-workload DSE** — a ``repro.dse.search`` Pareto sweep whose
+    evaluator runs *compiled* workloads (a suite sample plus a
+    user-style kernel that exists in no hand-written form), writing the
+    standard ``ggpu-dse/1`` artifact to ``BENCH_compiler.json`` (path
+    overridable via ``GGPU_COMPILER_OUT``).
+
+``--fast`` shrinks sizes and the spec grid; the nightly ``compiler-sweep``
+workflow runs the full version and uploads the artifact.
+
+Returns (artifact dict, problems list) — ``benchmarks.run`` exits
+non-zero when any invariant fails.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+#: reduced bench sizes for the fast (CI-smoke-adjacent) variant
+FAST_SIZES = {
+    "copy": (64, 512), "vec_mul": (64, 512), "div_int": (64, 512),
+    "reduction": (64, 512, 8), "fir": (64, 512), "mat_mul": (8, 16),
+    "xcorr": (32, 128), "parallel_sel": (32, 128),
+}
+#: full-sweep sizes: paper Table III except the O(n^2) kernels, which are
+#: trimmed to keep the nightly run under the job timeout
+FULL_SIZES = {
+    "xcorr": (64, 1024), "parallel_sel": (64, 1024),
+}
+
+
+def _user_kernel(n: int, seg: int):
+    """A segmented-reduction workload no hand-written bench covers."""
+    from repro.compiler import compile_kernel
+    return compile_kernel(lambda a, b: ((a - b) * a).seg_sum(seg),
+                          dict(a=n, b=n), name="user_segred")
+
+
+def bench_suite_parity(emit, fast: bool):
+    """Compile the eight benches, verify bit-exactness vs the hand-written
+    programs, and report cycles + compile times. Returns (rows, problems,
+    compiled) so the DSE section reuses the compiled suite."""
+    from repro.compiler import dsl_benches, hand_benches
+    from repro.ggpu.engine import GGPUConfig, run_kernel
+
+    sizes = dict(FAST_SIZES) if fast else dict(FULL_SIZES)
+    cfg = GGPUConfig(n_cus=2)
+    hands = hand_benches(sizes)
+    t0 = time.perf_counter()
+    compiled = dsl_benches(sizes, hands=hands)
+    compile_s = time.perf_counter() - t0
+    emit("compiler/suite/compile", compile_s * 1e6,
+         f"kernels={len(compiled)}")
+    rows: Dict[str, dict] = {}
+    problems: List[str] = []
+    for name in sorted(compiled):
+        base = name[len("dsl_"):]
+        hand = hands[base]
+        d = compiled[name]
+        mh, ih = run_kernel(hand.gpu_prog, hand.gpu_mem, hand.gpu_items,
+                            cfg)
+        md, idd = run_kernel(d.gpu_prog, d.gpu_mem, d.gpu_items, cfg)
+        exact = bool(np.array_equal(mh[hand.gpu_out], md[d.gpu_out]))
+        ref_ok = bool(np.array_equal(
+            md[d.gpu_out], hand.ref(hand.gpu_mem, hand.gpu_n)))
+        if not (exact and ref_ok):
+            problems.append(f"compiled {base} is not bit-exact")
+        ratio = idd["cycles"] / ih["cycles"]
+        rows[base] = {
+            "cycles_hand": ih["cycles"], "cycles_dsl": idd["cycles"],
+            "cycle_ratio": round(ratio, 3), "bit_exact": exact and ref_ok,
+            "prog_len": int(d.gpu_prog.shape[0]),
+        }
+        emit(f"compiler/suite/{base}", 0.0,
+             f"cycles={idd['cycles']} hand={ih['cycles']} "
+             f"ratio={ratio:.3f} bit_exact={exact and ref_ok}")
+    return rows, problems, compiled
+
+
+def bench_compiled_dse(emit, fast: bool,
+                       compiled: Dict[str, object]) -> Tuple[dict,
+                                                             List[str]]:
+    """Pareto sweep over compiled workloads (``compiled`` is the suite
+    ``bench_suite_parity`` already built); returns (artifact, problems).
+    """
+    from repro import dse
+
+    problems: List[str] = []
+    if fast:
+        specs = dse.enumerate_specs(cus=(1, 2),
+                                    freq_targets=(500.0, 667.0))
+        user = _user_kernel(512, 32)
+        sample = ("vec_mul", "reduction")
+    else:
+        specs = dse.enumerate_specs(
+            cus=(1, 2, 4, 8), freq_targets=(500.0, 590.0, 667.0, 750.0),
+            memsys=("shared", "banked", "banked-iso"))
+        user = _user_kernel(8192, 64)
+        sample = ("vec_mul", "reduction", "xcorr")
+    workloads = {n: b for n, b in compiled.items()
+                 if n[len("dsl_"):] in sample}
+    workloads["dsl_user_segred"] = user.as_bench(seed=11)
+    ev = dse.Evaluator(benches=(), workloads=workloads, check=True)
+    res = dse.search(specs=specs, evaluator=ev)
+    for row in res.report():
+        emit(f"compiler/dse/{row['label']}", row["time_us"],
+             f"area={row['area_mm2']:.2f} frontier={row['on_frontier']}")
+    if not res.frontier:
+        problems.append("compiled-workload DSE frontier is empty")
+    reference = min(res.frontier, key=lambda p: p.time_us) \
+        if res.frontier else res.points[0]
+    art = dse.dse_artifact(reference, res)
+    art["workloads"] = sorted(workloads)
+    return art, problems
+
+
+def bench_compiler(emit, fast: bool = False,
+                   out: str = None) -> Tuple[dict, List[str]]:
+    """Run both sections and write the ``BENCH_compiler.json`` artifact."""
+    import json
+
+    out = out or os.environ.get("GGPU_COMPILER_OUT", "BENCH_compiler.json")
+    rows, problems, compiled = bench_suite_parity(emit, fast)
+    art, p2 = bench_compiled_dse(emit, fast, compiled)
+    problems += p2
+    art["suite_parity"] = rows
+    with open(out, "w") as f:
+        json.dump(art, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("compiler/artifact", 0.0, f"wrote {out}")
+    return art, problems

@@ -106,11 +106,12 @@ def bench_memsys_sweep(emit, sizes=(64, 1024)) -> None:
              f"misses={info['misses']}")
 
 
-def bench_dse(emit, fast: bool = False, out: str = None) -> None:
+def bench_dse(emit, fast: bool = False, out: str = None):
     """The unified DSE sweep: plan + cycle-evaluate a design grid, emit the
     Pareto frontier, and write the standardized ``BENCH_dse.json`` artifact
     (path overridable via ``GGPU_DSE_OUT``). ``fast`` runs the 2-point
-    smoke grid CI uses."""
+    smoke grid CI uses. Returns (artifact dict, problems list) so
+    ``benchmarks.run`` can fail the build on a broken sweep."""
     import os
 
     from repro import dse
@@ -135,9 +136,13 @@ def bench_dse(emit, fast: bool = False, out: str = None) -> None:
          " ".join(p.label() for p in res.frontier))
     emit("dse/excluded_analytic", 0.0,
          " ".join(p.label() for p in res.excluded_analytic) or "-")
-    reference = min(res.frontier, key=lambda p: p.time_us)
+    problems = []
+    if not res.frontier:
+        problems.append("DSE Pareto frontier is empty")
+    reference = min(res.frontier or res.points, key=lambda p: p.time_us)
     path = dse.write_artifact(out, reference, res)
     emit("dse/artifact", 0.0, f"wrote {path} reference={reference.label()}")
+    return dse.dse_artifact(reference, res), problems
 
 
 def main(emit, fast: bool = False) -> None:

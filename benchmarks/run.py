@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV. Usage:
   PYTHONPATH=src python -m benchmarks.run [--fast] [--engine] [--dse] \
-      [--serve]
+      [--serve] [--compiler]
 ``--fast`` skips the O(n^2) cycle simulations (xcorr/parallel_sel) and
 shrinks the engine/DSE grids.
 ``--engine`` runs only the simulator-engine micro-benchmarks (fused
@@ -13,10 +13,27 @@ search) and writes the ``BENCH_dse.json`` artifact.
 ``--serve`` runs the serving-subsystem throughput + fleet-routing
 benchmark and writes the ``BENCH_serve.json`` artifact (schema
 ``ggpu-serve/1``; ``--serve --fast`` is the CI ``serve-smoke`` job).
+``--compiler`` runs the tensor-DSL compiler sweep (suite parity vs the
+hand-written benches + a compiled-workload DSE search) and writes
+``BENCH_compiler.json`` (the nightly ``compiler-sweep`` job).
+
+Smoke invariants (fleet routing must beat both pins, the executor cache
+must be hitting, DSE frontiers must be non-empty, compiled kernels must
+be bit-exact) are re-checked after each artifact-producing mode; any
+violation exits non-zero so CI fails instead of uploading a broken
+artifact.
 """
 from __future__ import annotations
 
 import sys
+from typing import List
+
+
+def _fail(problems: List[str]) -> None:
+    if problems:
+        for p in problems:
+            print(f"INVARIANT FAILED: {p}", file=sys.stderr)
+        sys.exit(1)
 
 
 def main() -> None:
@@ -28,11 +45,18 @@ def main() -> None:
     print("name,us_per_call,derived")
     if "--serve" in sys.argv:
         from benchmarks import serve_bench
-        serve_bench.bench_serve(emit, fast=fast)
+        art = serve_bench.bench_serve(emit, fast=fast)
+        _fail(serve_bench.invariant_problems(art))
         return
     if "--dse" in sys.argv:
         from benchmarks import engine_bench
-        engine_bench.bench_dse(emit, fast=fast)
+        _art, problems = engine_bench.bench_dse(emit, fast=fast)
+        _fail(problems)
+        return
+    if "--compiler" in sys.argv:
+        from benchmarks import compiler_bench
+        _art, problems = compiler_bench.bench_compiler(emit, fast=fast)
+        _fail(problems)
         return
     if "--engine" in sys.argv:
         from benchmarks import engine_bench
@@ -62,7 +86,7 @@ def main() -> None:
     roofline_table.summary(emit)
     rt.DRYRUN_DIR = __import__("pathlib").Path("experiments/dryrun_opt")
     emit("roofline/optimized", 0.0,
-         "optimized sweep (EXPERIMENTS.md \u00a7Perf)")
+         "optimized sweep (EXPERIMENTS.md §Perf)")
     roofline_table.roofline_table(emit)
     roofline_table.summary(emit)
 

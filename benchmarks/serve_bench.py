@@ -74,7 +74,8 @@ def bench_throughput(emit, fast: bool) -> dict:
         "batch_occupancy": round((st.launches - l0)
                                  / (st.dispatches - d0), 3),
         "executor_cache": {"hits": hits, "misses": misses,
-                           "hit_rate": round(hits / (hits + misses), 3)},
+                           "hit_rate": round(hits / (hits + misses), 3)
+                           if hits + misses else 0.0},
     }
     emit("serve/throughput", wall / served * 1e6,
          f"launches_per_sec={row['launches_per_sec']} "
@@ -134,8 +135,33 @@ def bench_fleet(emit, fast: bool) -> dict:
     return rep
 
 
-def bench_serve(emit, fast: bool = False, out: str = None) -> None:
-    """Run both sections and write the ``BENCH_serve.json`` artifact."""
+def invariant_problems(art: dict) -> list:
+    """Smoke invariants a healthy serve run must satisfy — checked by
+    ``benchmarks.run`` after the artifact is written so a broken result
+    fails the build instead of uploading quietly."""
+    problems = []
+    fleet = art.get("fleet", {})
+    if not fleet.get("beats_both_pins"):
+        problems.append(
+            "fleet.beats_both_pins: routing does not beat both pinned "
+            f"configs (makespan={fleet.get('makespan_us')} "
+            f"pinned={fleet.get('pinned_us')})")
+    if art.get("cache_hit_rate", 0) <= 0:
+        problems.append("cache_hit_rate: executor trace-cache hit rate "
+                        "is 0 — repeat traffic is re-tracing")
+    if art.get("batch_occupancy", 0) <= 1:
+        problems.append(
+            f"batch occupancy {art.get('batch_occupancy')} <= 1: the "
+            "scheduler is not folding same-kernel launches")
+    if fleet.get("quarantined"):
+        problems.append(
+            f"fleet quarantined launches: {fleet['quarantined']}")
+    return problems
+
+
+def bench_serve(emit, fast: bool = False, out: str = None) -> dict:
+    """Run both sections and write the ``BENCH_serve.json`` artifact;
+    returns the artifact dict."""
     out = out or os.environ.get("GGPU_SERVE_OUT", "BENCH_serve.json")
     throughput = bench_throughput(emit, fast)
     fleet = bench_fleet(emit, fast)
@@ -151,3 +177,4 @@ def bench_serve(emit, fast: bool = False, out: str = None) -> None:
         json.dump(art, f, indent=2, sort_keys=True)
         f.write("\n")
     emit("serve/artifact", 0.0, f"wrote {out}")
+    return art

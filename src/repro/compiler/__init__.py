@@ -1,0 +1,25 @@
+"""Kernel compiler front-end: tensor-expression DSL -> G-GPU programs.
+
+The workload-side generator that pairs with the hardware-side GPUPlanner
+(the paper's "fully-automated" loop closed on both ends): a small traced
+tensor DSL (``frontend``) over a per-item scalar expression IR (``ir``),
+folded/strength-reduced/CSE'd (``opt``) and lowered to both the SIMT and
+sequential-scalar ISA programs (``lower``). Every compiled kernel is
+differentially verifiable against a NumPy oracle with exact engine ALU
+semantics, and ``suite`` re-derives all eight hand-written benches from
+one-line DSL definitions so ``dse.search``, ``serve.Fleet``, and the
+benchmarks can sweep generated workloads instead of a fixed list
+(DESIGN.md §Compiler).
+"""
+from repro.compiler.frontend import (ScatterTensor, Tensor, compile_kernel,
+                                     dsl)
+from repro.compiler.ir import CompileError
+from repro.compiler.lower import CompiledKernel
+from repro.compiler.suite import (compile_pair, dsl_benches, dsl_kernels,
+                                  hand_benches)
+
+__all__ = [
+    "compile_kernel", "dsl", "Tensor", "ScatterTensor",
+    "CompiledKernel", "CompileError", "dsl_benches", "dsl_kernels",
+    "hand_benches", "compile_pair",
+]

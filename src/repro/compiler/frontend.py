@@ -1,0 +1,365 @@
+"""Tensor-expression frontend: ``compile_kernel`` and the ``dsl`` helpers.
+
+A traced, NumPy-flavoured API over the compiler stack::
+
+    from repro.compiler import compile_kernel
+
+    k = compile_kernel(lambda a, b: (a * b).seg_sum(64),
+                       dict(a=32768, b=32768))
+    out, info = k.run(k.random_inputs(), GGPUConfig(n_cus=4))
+
+The callable is traced once with symbolic ``Tensor`` placeholders (one per
+parameter, shapes from the ``shapes`` mapping). A ``Tensor`` is *lazy*: it
+carries a shape and a per-element expression builder, so elementwise
+chains fuse by construction — no intermediate arrays exist to store
+(``repro.compiler.opt`` module doc). The traced result lowers to both
+G-GPU program variants via ``repro.compiler.lower``.
+
+Operators: ``+ - * // % & | ^ << >>`` (int32, engine ALU semantics),
+``@`` (2-D matmul), ``Tensor.sum() / .seg_sum(seg)``, and the ``dsl``
+namespace: ``dot``, ``fir`` (boundary-guarded convolution), ``xcorr``
+(circular cross-correlation), ``stencil`` (constant-weight neighborhood
+sum), ``rank_sort`` (scatter by rank — a computed store address), and
+``wrap`` (circular index arithmetic).
+
+``coarsen=C`` tiles C consecutive output elements onto one work item
+(fewer wavefronts, more per-item work) — the workload half of the
+CU/wavefront tiling the engine applies to ``n_items``.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.compiler import opt
+from repro.compiler.ir import (CompileError, Const, Expr, Item, Kernel,
+                               Load)
+from repro.compiler.ir import wrap32 as ir_wrap32
+from repro.compiler.lower import CompiledKernel, lower_kernel
+
+Shape = Tuple[int, ...]
+
+
+def _norm_shape(s) -> Shape:
+    if isinstance(s, (int, np.integer)):
+        return (int(s),)
+    s = tuple(int(x) for x in s)
+    if not s or any(x < 1 for x in s) or len(s) > 2:
+        raise CompileError(f"unsupported shape {s}: need 1-D or 2-D, "
+                           "positive dims")
+    return s
+
+
+def _size(s: Shape) -> int:
+    n = 1
+    for x in s:
+        n *= x
+    return n
+
+
+class Tensor:
+    """A lazy int32 tensor: shape + per-element expression builder (row-
+    major linear index -> value expression)."""
+
+    def __init__(self, shape: Shape, elem: Callable[[Expr], Expr]):
+        self.shape = _norm_shape(shape)
+        self.elem = elem
+
+    @property
+    def size(self) -> int:
+        return _size(self.shape)
+
+    # -- elementwise --------------------------------------------------------
+
+    def _binary(self, other, op: str, rev: bool = False) -> "Tensor":
+        if isinstance(other, (int, np.integer)):
+            v = ir_wrap32(int(other))
+            other = Tensor(self.shape, lambda i, _v=v: Const(_v))
+        if not isinstance(other, Tensor):
+            return NotImplemented
+        if other.shape != self.shape:
+            raise CompileError(f"shape mismatch: {self.shape} vs "
+                               f"{other.shape} for {op!r}")
+        a, b = (other, self) if rev else (self, other)
+        return Tensor(self.shape,
+                      lambda i: opt.binop(op, a.elem(i), b.elem(i)))
+
+    def __add__(self, o):
+        return self._binary(o, "add")
+
+    def __radd__(self, o):
+        return self._binary(o, "add", rev=True)
+
+    def __sub__(self, o):
+        return self._binary(o, "sub")
+
+    def __rsub__(self, o):
+        return self._binary(o, "sub", rev=True)
+
+    def __mul__(self, o):
+        return self._binary(o, "mul")
+
+    def __rmul__(self, o):
+        return self._binary(o, "mul", rev=True)
+
+    def __floordiv__(self, o):
+        return self._binary(o, "div")
+
+    def __rfloordiv__(self, o):
+        return self._binary(o, "div", rev=True)
+
+    def __mod__(self, o):
+        return self._binary(o, "rem")
+
+    def __rmod__(self, o):
+        return self._binary(o, "rem", rev=True)
+
+    def __and__(self, o):
+        return self._binary(o, "and")
+
+    def __rand__(self, o):
+        return self._binary(o, "and", rev=True)
+
+    def __or__(self, o):
+        return self._binary(o, "or")
+
+    def __ror__(self, o):
+        return self._binary(o, "or", rev=True)
+
+    def __xor__(self, o):
+        return self._binary(o, "xor")
+
+    def __rxor__(self, o):
+        return self._binary(o, "xor", rev=True)
+
+    def __lshift__(self, o):
+        return self._binary(o, "shl")
+
+    def __rlshift__(self, o):
+        return self._binary(o, "shl", rev=True)
+
+    def __rshift__(self, o):
+        return self._binary(o, "sra")
+
+    def __rrshift__(self, o):
+        return self._binary(o, "sra", rev=True)
+
+    def __lt__(self, o):
+        return self._binary(o, "slt")
+
+    def __gt__(self, o):
+        return self._binary(o, "slt", rev=True)
+
+    def __neg__(self):
+        return Tensor(self.shape,
+                      lambda i: opt.sub(Const(0), self.elem(i)))
+
+    # -- reductions ---------------------------------------------------------
+
+    def seg_sum(self, seg: int) -> "Tensor":
+        """Segmented sum: output ``i`` is the int32 sum of the ``seg``-long
+        input segment ``[i*seg, (i+1)*seg)``."""
+        n = self.size
+        if seg < 1 or n % seg:
+            raise CompileError(
+                f"seg_sum: segment {seg} must divide the size {n}")
+        return Tensor((n // seg,), lambda i: opt.reduce_sum(
+            seg, lambda k: self.elem(opt.add(opt.mul(i, seg), k))))
+
+    def sum(self) -> "Tensor":
+        """Full reduction to one element."""
+        return self.seg_sum(self.size)
+
+    # -- matmul -------------------------------------------------------------
+
+    def __matmul__(self, other: "Tensor") -> "Tensor":
+        if not isinstance(other, Tensor):
+            return NotImplemented
+        if len(self.shape) != 2 or len(other.shape) != 2 \
+                or self.shape[1] != other.shape[0]:
+            raise CompileError(f"matmul shapes {self.shape} @ "
+                               f"{other.shape} do not agree")
+        m, kk = self.shape
+        _, n = other.shape
+
+        def elem(i: Expr) -> Expr:
+            row = opt.div(i, n)
+            col = opt.rem(i, n)
+            return opt.reduce_sum(kk, lambda t: opt.mul(
+                self.elem(opt.add(opt.mul(row, kk), t)),
+                other.elem(opt.add(opt.mul(t, n), col))))
+
+        return Tensor((m, n), elem)
+
+
+class ScatterTensor:
+    """A kernel result whose store *address* is computed per item (e.g.
+    rank sort). ``addr``/``val`` map the item index expression to the
+    output address (relative to the output base) and stored value."""
+
+    def __init__(self, out_len: int, addr: Callable[[Expr], Expr],
+                 val: Callable[[Expr], Expr]):
+        self.out_len = out_len
+        self.addr = addr
+        self.val = val
+
+
+# ---------------------------------------------------------------------------
+# dsl namespace
+# ---------------------------------------------------------------------------
+
+class dsl:
+    """Structured operators beyond the elementwise/NumPy surface."""
+
+    @staticmethod
+    def dot(a: Tensor, b: Tensor) -> Tensor:
+        return (a * b).sum()
+
+    @staticmethod
+    def wrap(idx: Expr, n: int) -> Expr:
+        """Circular index: ``idx - n if idx >= n else idx`` (for
+        ``idx < 2n``) — compiles to the conditional-subtract idiom."""
+        return opt.sub(idx, opt.guard(opt.cond("ge", idx, Const(n)),
+                                      Const(n)))
+
+    @staticmethod
+    def fir(x: Tensor, h: Tensor) -> Tensor:
+        """Boundary-guarded FIR filter: ``out[i] = sum_t h[t]*x[i-t]``
+        for ``i - t >= 0``."""
+        taps = h.size
+
+        def elem(i: Expr) -> Expr:
+            def term(t):
+                j = opt.sub(i, t)
+                return opt.guard(
+                    opt.cond("ge", j, Const(0)),
+                    opt.mul(x.elem(j), h.elem(t)))
+            return opt.reduce_sum(taps, term)
+
+        return Tensor(x.shape, elem)
+
+    @staticmethod
+    def xcorr(a: Tensor, b: Tensor) -> Tensor:
+        """Circular cross-correlation:
+        ``out[lag] = sum_i a[i]*b[(i+lag) mod n]``."""
+        n = a.size
+        if b.size != n:
+            raise CompileError("xcorr operands must share a size")
+
+        def elem(lag: Expr) -> Expr:
+            return opt.reduce_sum(n, lambda i: opt.mul(
+                a.elem(i), b.elem(dsl.wrap(opt.add(i, lag), n))))
+
+        return Tensor(a.shape, elem)
+
+    @staticmethod
+    def stencil(x: Tensor, weights: Sequence[int],
+                offsets: Sequence[int]) -> Tensor:
+        """Constant-weight neighborhood sum with zero boundary:
+        ``out[i] = sum_k w[k] * x[i + off[k]]`` for in-range indices."""
+        if len(weights) != len(offsets):
+            raise CompileError("stencil needs one weight per offset")
+        n = x.size
+
+        def elem(i: Expr) -> Expr:
+            acc: Expr = Const(0)
+            for w, off in zip(weights, offsets):
+                if w == 0:
+                    continue
+                j = opt.add(i, Const(ir_wrap32(int(off))))
+                term = opt.mul(x.elem(j), Const(ir_wrap32(int(w))))
+                if off < 0:
+                    term = opt.guard(opt.cond("ge", j, Const(0)), term)
+                elif off > 0:
+                    term = opt.guard(opt.cond("lt", j, Const(n)), term)
+                acc = opt.add(acc, term)
+            return acc
+
+        return Tensor(x.shape, elem)
+
+    @staticmethod
+    def rank_sort(a: Tensor) -> ScatterTensor:
+        """Stable rank sort (the paper's ``parallel_sel``): item ``i``
+        stores ``a[i]`` at its rank — ``#{j : a[j] < a[i]}`` plus the tie
+        count ``#{j < i : a[j] == a[i]}``. Branch-free arithmetic body
+        (no wavefront divergence), scatter store."""
+        n = a.size
+
+        def addr(i: Expr) -> Expr:
+            v = a.elem(i)
+
+            def term(j):
+                aj = a.elem(j)
+                below = opt.lt_val(aj, v)
+                # eq from the compares already in flight (CSE shares
+                # ``below``): eq = !(aj<v | v<aj)
+                eq = opt.binop(
+                    "xor",
+                    opt.binop("or", below, opt.lt_val(v, aj)), Const(1))
+                return opt.add(below,
+                               opt.binop("and", eq, opt.lt_val(j, i)))
+
+            return opt.reduce_sum(n, term)
+
+        return ScatterTensor(n, addr, lambda i: a.elem(i))
+
+
+# ---------------------------------------------------------------------------
+# compile_kernel
+# ---------------------------------------------------------------------------
+
+def compile_kernel(fn: Callable, shapes: Union[Dict[str, object],
+                                               Sequence[object]],
+                   name: Optional[str] = None,
+                   coarsen: int = 1) -> CompiledKernel:
+    """Trace ``fn`` over symbolic tensors and lower to G-GPU programs.
+
+    ``shapes`` maps the callable's parameter names to int / (rows, cols)
+    shapes (a sequence is matched positionally). ``coarsen`` folds that
+    many consecutive output elements into each work item."""
+    params = list(inspect.signature(fn).parameters)
+    if isinstance(shapes, dict):
+        missing = [p for p in params if p not in shapes]
+        if missing:
+            raise CompileError(f"no shape given for parameters {missing}")
+        shape_list = [shapes[p] for p in params]
+    else:
+        if len(shapes) != len(params):
+            raise CompileError(f"{len(params)} parameters but "
+                               f"{len(shapes)} shapes")
+        shape_list = list(shapes)
+
+    arrays: Dict[str, int] = {}
+    placeholders: List[Tensor] = []
+    for p, s in zip(params, shape_list):
+        shape = _norm_shape(s)
+        arrays[p] = _size(shape)
+        placeholders.append(
+            Tensor(shape, lambda i, _p=p: Load(_p, i)))
+
+    out = fn(*placeholders)
+    if isinstance(out, Tensor):
+        out = ScatterTensor(out.size, lambda i: i, out.elem)
+    if not isinstance(out, ScatterTensor):
+        raise CompileError(
+            f"kernel must return a Tensor or ScatterTensor, got "
+            f"{type(out).__name__}")
+
+    if coarsen < 1 or out.out_len % coarsen:
+        raise CompileError(
+            f"coarsen={coarsen} must divide the output length "
+            f"{out.out_len}")
+    stores = []
+    item = Item()
+    for t in range(coarsen):
+        idx = opt.add(opt.mul(item, coarsen), t)
+        stores.append((out.addr(idx), out.val(idx)))
+
+    kernel = Kernel(
+        name=name or getattr(fn, "__name__", "kernel").replace(
+            "<lambda>", "kernel"),
+        arrays=arrays, out_len=out.out_len,
+        n_items=out.out_len // coarsen, stores=stores)
+    return lower_kernel(kernel)

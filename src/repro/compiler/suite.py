@@ -1,0 +1,154 @@
+"""DSL re-implementations of the eight hand-written benches.
+
+Each of ``repro.ggpu.programs``' kernels re-derives from a one-line
+tensor-DSL definition. The compiled kernels share the hand-written memory
+layout (inputs in argument order, then the output region), so a compiled
+program runs against the *same* memory image as its hand-written twin and
+must produce bit-exact results — ``tests/test_compiler.py`` proves this
+and pins golden cycle counts.
+
+Compiled-vs-hand cycle parity (measured, see the golden test):
+
+  * ``copy``, ``vec_mul``, ``div_int``, ``mat_mul``, ``fir``,
+    ``reduction``, ``xcorr`` compile to the same instruction sequences as
+    the hand-written programs (same per-round ops, same addresses) and
+    are cycle-identical;
+  * ``parallel_sel`` compiles to a *branch-free* arithmetic rank body
+    instead of the hand-written divergent compare chain — more
+    instructions per iteration but no wavefront divergence; its cycles
+    are pinned as goldens and compared to the hand-written count in the
+    test (documented-different, bit-exact results).
+
+``dsl_benches`` returns ``programs.Bench`` records whose programs are the
+compiled ones (memory images, references, and slices reused from the
+hand-written builders), ready for ``dse.Evaluator(workloads=...)`` and
+the serving stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.compiler.frontend import compile_kernel, dsl
+from repro.compiler.ir import CompileError
+from repro.compiler.lower import CompiledKernel
+from repro.ggpu import programs
+
+
+def k_copy(n: int) -> CompiledKernel:
+    return compile_kernel(lambda a: a, dict(a=n), name="copy")
+
+
+def k_vec_mul(n: int) -> CompiledKernel:
+    return compile_kernel(lambda a, b: a * b, dict(a=n, b=n),
+                          name="vec_mul")
+
+
+def k_mat_mul(d: int) -> CompiledKernel:
+    return compile_kernel(lambda a, b: a @ b,
+                          dict(a=(d, d), b=(d, d)), name="mat_mul")
+
+
+def k_fir(n: int, taps: int = 16) -> CompiledKernel:
+    return compile_kernel(lambda x, h: dsl.fir(x, h),
+                          dict(x=n, h=taps), name="fir")
+
+
+def k_div_int(n: int) -> CompiledKernel:
+    return compile_kernel(lambda a, b: a // b, dict(a=n, b=n),
+                          name="div_int")
+
+
+def k_xcorr(n: int) -> CompiledKernel:
+    return compile_kernel(lambda a, b: dsl.xcorr(a, b), dict(a=n, b=n),
+                          name="xcorr")
+
+
+def k_parallel_sel(n: int) -> CompiledKernel:
+    return compile_kernel(lambda a: dsl.rank_sort(a), dict(a=n),
+                          name="parallel_sel")
+
+
+def k_reduction(n: int, seg: int = programs.REDUCTION_SEG
+                ) -> CompiledKernel:
+    return compile_kernel(lambda a, b: (a * b).seg_sum(seg),
+                          dict(a=n, b=n), name="reduction")
+
+
+#: bench name -> (gpu-size kernel builder, scalar-size kernel builder)
+#: taking the same size arguments as the ``programs._<name>`` builders
+_BUILDERS = {
+    "copy": k_copy,
+    "vec_mul": k_vec_mul,
+    "mat_mul": k_mat_mul,
+    "fir": k_fir,
+    "div_int": k_div_int,
+    "xcorr": k_xcorr,
+    "parallel_sel": k_parallel_sel,
+    "reduction": k_reduction,
+}
+
+
+def hand_benches(sizes: Optional[Dict[str, Tuple[int, ...]]] = None
+                 ) -> Dict[str, "programs.Bench"]:
+    """The hand-written benches at the given sizes (one build per name —
+    shared by every suite entry point so nothing constructs them twice).
+    ``sizes`` maps a name to the ``programs._<name>`` builder's size
+    arguments (scalar, gpu[, extra]); defaults are Table III."""
+    sizes = dict(sizes or {})
+    out = {}
+    for name in _BUILDERS:
+        build = getattr(programs, f"_{name}")
+        sz = sizes.get(name)
+        out[name] = build(*sz) if sz is not None else build()
+    return out
+
+
+def compile_pair(name: str, b: "programs.Bench"
+                 ) -> Tuple[CompiledKernel, CompiledKernel]:
+    """(gpu-size, scalar-size) compiled kernels matching a hand bench."""
+    build = _BUILDERS[name]
+    if name == "mat_mul":
+        return (build(int(np.sqrt(b.gpu_n))),
+                build(int(np.sqrt(b.scalar_n))))
+    extra = ()
+    if name == "fir":
+        extra = (16,)
+    elif name == "reduction":
+        extra = (b.gpu_n // b.gpu_items,)
+    return build(b.gpu_n, *extra), build(b.scalar_n, *extra)
+
+
+def dsl_kernels(sizes: Optional[Dict[str, Tuple[int, ...]]] = None
+                ) -> Dict[str, Tuple[CompiledKernel, CompiledKernel]]:
+    """Compile all eight benches; returns name -> (gpu-size kernel,
+    scalar-size kernel). ``sizes`` as in ``hand_benches``."""
+    return {name: compile_pair(name, b)
+            for name, b in hand_benches(sizes).items()}
+
+
+def dsl_benches(sizes: Optional[Dict[str, Tuple[int, ...]]] = None,
+                prefix: str = "dsl_",
+                hands: Optional[Dict[str, "programs.Bench"]] = None
+                ) -> Dict[str, "programs.Bench"]:
+    """``programs.Bench`` records with compiled programs in place of the
+    hand-written ones. The memory images, output slices, item counts, and
+    NumPy references are the hand-written builders' own — the compiled
+    layout is verified to coincide. Pass ``hands`` (from
+    ``hand_benches``) to reuse already-built benches."""
+    out = {}
+    for name, b in (hands or hand_benches(sizes)).items():
+        kg, ks = compile_pair(name, b)
+        if kg.mem_size != b.gpu_mem.shape[0] or kg.n_items != b.gpu_items \
+                or kg.out != b.gpu_out:
+            raise CompileError(
+                f"compiled {name} layout diverges from the hand-written "
+                f"bench: mem {kg.mem_size} vs {b.gpu_mem.shape[0]}, "
+                f"items {kg.n_items} vs {b.gpu_items}, "
+                f"out {kg.out} vs {b.gpu_out}")
+        out[prefix + name] = dataclasses.replace(
+            b, name=prefix + name, gpu_prog=kg.prog,
+            scalar_prog=ks.scalar_prog)
+    return out

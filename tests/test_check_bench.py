@@ -1,0 +1,127 @@
+"""Perf-regression gate (``benchmarks/check_bench.py``): the committed
+baselines must pass against themselves, and injected regressions — a
+cycle drift, a broken routing invariant, a throughput collapse — must
+fail the gate (this is the CI demonstration the dse-/serve-smoke jobs
+rely on)."""
+import copy
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from benchmarks.check_bench import check_artifacts, main  # noqa: E402
+
+BASELINES = ROOT / "benchmarks" / "baselines"
+
+
+@pytest.fixture(scope="module")
+def dse_base():
+    return json.loads((BASELINES / "BENCH_dse.json").read_text())
+
+
+@pytest.fixture(scope="module")
+def serve_base():
+    return json.loads((BASELINES / "BENCH_serve.json").read_text())
+
+
+def test_baselines_pass_against_themselves(dse_base, serve_base):
+    assert check_artifacts(copy.deepcopy(dse_base), dse_base) == []
+    assert check_artifacts(copy.deepcopy(serve_base), serve_base) == []
+
+
+def test_injected_cycle_regression_fails(dse_base):
+    fresh = copy.deepcopy(dse_base)
+    bench = next(iter(fresh["benches"]))
+    fresh["benches"][bench]["cycles"] += 1
+    violations = check_artifacts(fresh, dse_base)
+    assert any("cycles" in v for v in violations), violations
+
+
+def test_cycles_are_exact_not_banded(dse_base):
+    """Even a 0.1% cycle drift fails — cycles carry no tolerance band."""
+    fresh = copy.deepcopy(dse_base)
+    for row in fresh["benches"].values():
+        row["cycles"] = int(row["cycles"] * 1.001) + 1
+    assert check_artifacts(fresh, dse_base)
+
+
+def test_modeled_time_band(dse_base):
+    fresh = copy.deepcopy(dse_base)
+    for row in fresh["benches"].values():
+        row["time_us"] *= 1.1                  # within ±25%
+    assert check_artifacts(fresh, dse_base) == []
+    for row in fresh["benches"].values():
+        row["time_us"] *= 1.5                  # now far outside
+    violations = check_artifacts(fresh, dse_base)
+    assert any("time_us" in v for v in violations), violations
+
+
+def test_frontier_membership_is_exact(dse_base):
+    fresh = copy.deepcopy(dse_base)
+    fresh["frontier"] = fresh["frontier"][:-1]
+    violations = check_artifacts(fresh, dse_base)
+    assert any("frontier" in v for v in violations), violations
+
+
+def test_serve_routing_invariant(serve_base):
+    fresh = copy.deepcopy(serve_base)
+    fresh["fleet"]["beats_both_pins"] = False
+    violations = check_artifacts(fresh, serve_base)
+    assert any("beats_both_pins" in v for v in violations), violations
+
+
+def test_serve_cache_and_occupancy_exact(serve_base):
+    fresh = copy.deepcopy(serve_base)
+    fresh["cache_hit_rate"] = 0.0
+    violations = check_artifacts(fresh, serve_base)
+    assert any("cache_hit_rate" in v for v in violations), violations
+    fresh = copy.deepcopy(serve_base)
+    fresh["batch_occupancy"] = 1.0
+    assert any("batch_occupancy" in v
+               for v in check_artifacts(fresh, serve_base))
+
+
+def test_serve_host_throughput_band(serve_base):
+    fresh = copy.deepcopy(serve_base)
+    fresh["launches_per_sec"] = serve_base["launches_per_sec"] / 2
+    assert check_artifacts(fresh, serve_base) == []     # within x4 band
+    fresh["launches_per_sec"] = serve_base["launches_per_sec"] / 10
+    violations = check_artifacts(fresh, serve_base)
+    assert any("launches_per_sec" in v for v in violations), violations
+    # tightened band (pinned runners): half throughput now fails
+    fresh["launches_per_sec"] = serve_base["launches_per_sec"] / 2
+    assert check_artifacts(fresh, serve_base, host_tol=0.25)
+
+
+def test_unknown_schema_rejected(dse_base):
+    base = copy.deepcopy(dse_base)
+    base["schema"] = "ggpu-mystery/9"
+    assert check_artifacts(copy.deepcopy(base), base)
+
+
+def test_cli_exit_codes(tmp_path, dse_base):
+    good = tmp_path / "fresh.json"
+    good.write_text(json.dumps(dse_base))
+    baseline = str(BASELINES / "BENCH_dse.json")
+    assert main([str(good), baseline]) == 0
+    bad_art = copy.deepcopy(dse_base)
+    bench = next(iter(bad_art["benches"]))
+    bad_art["benches"][bench]["cycles"] *= 2
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(bad_art))
+    assert main([str(bad), baseline]) == 1
+
+
+def test_ci_wires_the_gate():
+    """The workflow must actually run the gate after both smokes."""
+    ci = (ROOT / ".github" / "workflows" / "ci.yml").read_text()
+    assert ci.count("benchmarks.check_bench") == 2
+    assert "benchmarks/baselines/BENCH_dse.json" in ci
+    assert "benchmarks/baselines/BENCH_serve.json" in ci
+    assert "cancel-in-progress" in ci
+    nightly = (ROOT / ".github" / "workflows" / "nightly.yml").read_text()
+    assert "schedule" in nightly and "--compiler" in nightly

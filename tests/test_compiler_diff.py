@@ -1,0 +1,139 @@
+"""Compiler differential suite: randomized DSL expressions executed on
+the engine vs the NumPy oracle.
+
+Two layers:
+
+  * a seeded generator that always runs (fixed seeds, so the tier-1 suite
+    is deterministic), covering random elementwise/reduction expression
+    trees on a 1-CU machine plus one fixed expression across the full
+    {scalar, 1/2/4 CU} x {shared, banked} machine matrix;
+  * a hypothesis property (via ``tests/_hypothesis_compat``) that widens
+    the same generator when hypothesis is installed, and degrades to a
+    skip when it is not.
+
+``GGPU_FAST_TESTS=1`` trims the seed count and the machine matrix.
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(__file__))
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: E402
+
+from repro.compiler import compile_kernel, dsl  # noqa: E402
+from repro.ggpu.engine import GGPUConfig, ScalarConfig  # noqa: E402
+
+FAST = os.environ.get("GGPU_FAST_TESTS", "0") not in ("", "0")
+
+N = 64
+#: binary operators safe at any operand value (engine semantics mirrored
+#: exactly by the oracle, including division by zero)
+BIN_FNS = [
+    lambda a, b: a + b,
+    lambda a, b: a - b,
+    lambda a, b: a * b,
+    lambda a, b: a // b,
+    lambda a, b: a % b,
+    lambda a, b: a & b,
+    lambda a, b: a | b,
+    lambda a, b: a ^ b,
+    lambda a, b: a < b,
+]
+UNARY_FNS = [
+    lambda a: a >> 2,
+    lambda a: a << 1,
+    lambda a: a * 3,
+    lambda a: a + 17,
+    lambda a: -a,
+    lambda a: a % 5,
+]
+
+
+def _random_exprfn(rng):
+    """A random 2-input elementwise/reduction kernel body."""
+    def build(depth):
+        r = rng.integers(0, 4)
+        if depth <= 0 or r == 0:
+            return lambda a, b: (a, b)[rng.integers(0, 2)]
+        if r == 1:
+            f, sub = rng.choice(UNARY_FNS), build(depth - 1)
+            return lambda a, b: f(sub(a, b))
+        f = BIN_FNS[rng.integers(0, len(BIN_FNS))]
+        l, rr = build(depth - 1), build(depth - 1)
+        return lambda a, b: f(l(a, b), rr(a, b))
+
+    body = build(int(rng.integers(1, 4)))
+    if rng.integers(0, 2):
+        seg = int(rng.choice([4, 8, 16]))
+        return lambda a, b: body(a, b).seg_sum(seg)
+    return body
+
+
+def _check(fn, seed, cfg, scalar=False, lo=-100, hi=100):
+    k = compile_kernel(fn, dict(a=N, b=N), name=f"rand{seed}")
+    ins = k.random_inputs(lo=lo, hi=hi, seed=seed)
+    k.verify(ins, cfg, scalar=scalar)
+
+
+@pytest.mark.parametrize("seed", range(3 if FAST else 6))
+def test_random_expressions_bit_exact(seed):
+    rng = np.random.default_rng(100 + seed)
+    _check(_random_exprfn(rng), seed, GGPUConfig(n_cus=1))
+
+
+def test_random_expression_edge_values():
+    """Extreme operands: wraparound, INT32 edges, zero divisors."""
+    fn = (lambda a, b: ((a * b) ^ (a // b)) + (a % b))
+    k = compile_kernel(fn, dict(a=N, b=N), name="edges")
+    rng = np.random.default_rng(0)
+    ins = {
+        "a": rng.choice(np.array([0, 1, -1, 2 ** 31 - 1, -2 ** 31,
+                                  12345, -54321], np.int32), N),
+        # -1 is excluded: INT32_MIN // -1 overflows int32 and XLA's CPU
+        # lowering of that single case is platform-defined
+        "b": rng.choice(np.array([0, 1, 3, -3, 2 ** 31 - 1],
+                                 np.int32), N),
+    }
+    k.verify(ins, GGPUConfig(n_cus=1))
+
+
+MACHINES = [("scalar", None), ("1cu", 1), ("2cu", 2), ("4cu", 4)]
+MEMSYS = ["shared", "banked"]
+if FAST:
+    MACHINES = [("scalar", None), ("2cu", 2)]
+
+
+@pytest.mark.parametrize("memsys", MEMSYS)
+@pytest.mark.parametrize("machine,cus", MACHINES)
+def test_fixed_expression_machine_matrix(machine, cus, memsys):
+    """One mixed expression (fused elementwise + segmented reduction +
+    guarded stencil) across the machine x memory-system matrix."""
+    def fn(a, b):
+        return (dsl.stencil(a, [1, 1], [-1, 1]) * b + 3).seg_sum(8)
+
+    if cus is None:
+        if memsys != "shared":
+            pytest.skip("scalar baseline models the shared cache")
+        _check(fn, 42, ScalarConfig(), scalar=True)
+    else:
+        _check(fn, 42, GGPUConfig(n_cus=cus, memsys=memsys))
+
+
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.integers(min_value=1, max_value=3))
+@settings(max_examples=10, deadline=None)
+def test_property_random_expressions(seed, depth):
+    """Hypothesis-driven widening of the seeded generator (skips without
+    hypothesis installed)."""
+    rng = np.random.default_rng(seed)
+    fn = _random_exprfn(rng)
+    _check(fn, seed % 97, GGPUConfig(n_cus=1))
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="documentation marker")
+def test_property_suite_is_live():
+    """Guards against the property test silently degrading when
+    hypothesis IS available."""
+    assert HAVE_HYPOTHESIS
