@@ -7,7 +7,7 @@ CI runs the ``dse-smoke`` / ``serve-smoke`` jobs, then::
 
 and fails the build on any violation, so a perf regression breaks CI
 instead of uploading quietly. The artifact kind is auto-detected from the
-``schema`` field (``ggpu-dse/1`` / ``ggpu-serve/1``).
+``schema`` field (``ggpu-dse/1`` / ``ggpu-serve/2``).
 
 Tolerance bands per metric class:
 
@@ -39,7 +39,7 @@ import sys
 from typing import List, Optional
 
 DSE_SCHEMA = "ggpu-dse/1"
-SERVE_SCHEMA = "ggpu-serve/1"
+SERVE_SCHEMA = "ggpu-serve/2"
 
 
 def _band(violations: List[str], name: str, fresh, base, tol: float):
@@ -109,12 +109,20 @@ def check_serve(fresh: dict, base: dict, tol: float,
     v: List[str] = []
     _exact(v, "schema", fresh.get("schema"), base.get("schema"))
     # absolute health invariants: one definition, shared with the
-    # benchmark harness's own exit-code check (benchmarks.run --serve)
+    # benchmark harness's own exit-code check (benchmarks.run --serve).
+    # This includes the async-beats-sync gate: a fresh artifact whose
+    # pipelined drain does not clear ASYNC_MIN_SPEEDUP over the sync
+    # serial drain fails the build.
     v += invariant_problems(fresh)
     _exact(v, "batch_occupancy", fresh.get("batch_occupancy"),
            base.get("batch_occupancy"))
     _exact(v, "cache_hit_rate", fresh.get("cache_hit_rate"),
            base.get("cache_hit_rate"))
+    _ratio_band(v, "sync_launches_per_sec",
+                fresh.get("sync_launches_per_sec"),
+                base.get("sync_launches_per_sec"), host_tol)
+    _ratio_band(v, "cold_trace_s", fresh.get("cold_trace_s"),
+                base.get("cold_trace_s"), host_tol)
     _band(v, "fleet.makespan_us", fresh.get("fleet", {}).get("makespan_us"),
           base.get("fleet", {}).get("makespan_us"), tol)
     fp = fresh.get("fleet", {}).get("pinned_us", {})

@@ -9,6 +9,11 @@ Measures the execution-engine refactor itself, not the simulated machine:
     only simulator speed changes.
   * batched launches — N same-kernel launches sequentially vs one
     ``LaunchQueue`` flush (cohort-folded into a single stepper call).
+  * async launches   — N single launches serially (each ``run_kernel``
+    blocks on its own download) vs N ``run_kernel_async`` dispatches
+    resolved after the last one is in flight; the cold trace (first
+    call, pays the jit compile) is reported separately from both
+    steady-state rates.
   * memsys sweep     — the cache-organization DSE on the bench the paper
     flags as cache-thrashing (xcorr at 8 CUs).
   * dse sweep        — the unified analytic+cycle-accurate Pareto search
@@ -96,6 +101,50 @@ def bench_batched_launch(emit, n_launches: int = 8, n: int = 512) -> float:
     return t_seq / t_bat
 
 
+def bench_async_launch(emit, n_launches: int = 16, n: int = 512) -> float:
+    """Sync-vs-async single-launch streams at the engine level: the async
+    path dispatches every launch before resolving any, so staging and
+    download of launch k+1 overlap launch k's device compute. Results are
+    asserted bit-exact; returns the steady-state speedup."""
+    from repro.ggpu import programs
+    from repro.ggpu.engine import GGPUConfig, run_kernel, run_kernel_async
+
+    cfg = GGPUConfig(n_cus=2)
+    b = programs._vec_mul(32, n)
+    rng = np.random.default_rng(3)
+    nm = b.gpu_mem.shape[0]
+    mems = [np.concatenate([rng.integers(-100, 100,
+                                         2 * b.gpu_n).astype(np.int32),
+                            np.zeros(nm - 2 * b.gpu_n, np.int32)])
+            for _ in range(n_launches)]
+
+    t0 = time.perf_counter()
+    run_kernel(b.gpu_prog, mems[0], b.gpu_items, cfg)   # cold: jit compile
+    cold_s = time.perf_counter() - t0
+    emit(f"engine/async{n_launches}x_vec_mul{n}/cold_trace", cold_s * 1e6,
+         "first launch incl. jit compile")
+
+    def sync():
+        return [run_kernel(b.gpu_prog, m, b.gpu_items, cfg) for m in mems]
+
+    def asy():
+        handles = [run_kernel_async(b.gpu_prog, m, b.gpu_items, cfg)
+                   for m in mems]
+        return [h.result() for h in handles]
+
+    t_sync, sync_out = _time(sync, reps=3)
+    t_async, async_out = _time(asy, reps=3)
+    exact = all(np.array_equal(ms, ma) and is_["cycles"] == ia["cycles"]
+                for (ms, is_), (ma, ia) in zip(sync_out, async_out))
+    assert exact, "async launch path diverged from sync results"
+    emit(f"engine/async{n_launches}x_vec_mul{n}/sync", t_sync * 1e6,
+         f"launches_per_sec={n_launches / t_sync:.0f}")
+    emit(f"engine/async{n_launches}x_vec_mul{n}/async", t_async * 1e6,
+         f"launches_per_sec={n_launches / t_async:.0f} "
+         f"speedup={t_sync / t_async:.2f}x bit_exact={exact}")
+    return t_sync / t_async
+
+
 def bench_memsys_sweep(emit, sizes=(64, 1024)) -> None:
     from repro.dse import sweep_memsys
 
@@ -149,9 +198,11 @@ def main(emit, fast: bool = False) -> None:
     if fast:
         bench_fused_dispatch(emit, n_gpu=256)
         bench_batched_launch(emit, n_launches=4, n=128)
+        bench_async_launch(emit, n_launches=8)
         bench_memsys_sweep(emit, sizes=(32, 256))
     else:
         bench_fused_dispatch(emit)
         bench_batched_launch(emit)
+        bench_async_launch(emit)
         bench_memsys_sweep(emit)
     bench_dse(emit, fast=fast)

@@ -156,8 +156,12 @@ class Evaluator:
 
     def _simulate_config(self, cfg: GGPUConfig, names: Sequence[str]) -> None:
         """Run every unmemoized bench for one engine config as a single
-        Scheduler drain (cohort/batch-folded where shapes allow) on the
-        process-wide shared executor for that config."""
+        pipelined Scheduler drain (cohort/batch-folded where shapes allow)
+        on the process-wide shared executor for that config. The evaluator
+        needs cycles only, so each launch declares an empty ``out_region``
+        and the final memory images are never downloaded from the device —
+        except under ``check=True``, which pulls the full image to verify
+        it against the bench's numpy reference."""
         from repro.serve.executors import get_executor
         from repro.serve.scheduler import Scheduler
         ex = get_executor(cfg)
@@ -170,7 +174,8 @@ class Evaluator:
         sched = Scheduler(executor=ex)
         for n in todo:
             b = self._benches[n]
-            sched.submit(b.gpu_prog, b.gpu_mem, b.gpu_items, tag=n)
+            sched.submit(b.gpu_prog, b.gpu_mem, b.gpu_items, tag=n,
+                         out_region=None if self.check else (0, 0))
         t0 = time.perf_counter()
         results = sched.drain()
         wall = (time.perf_counter() - t0) / len(todo)

@@ -24,13 +24,18 @@ from repro.ggpu.engine.config import GGPUConfig, ScalarConfig
 from repro.ggpu.engine.memsys import (MEMSYS_REGISTRY, BankedPerCUCache,
                                       CacheResult, MemorySystem, SharedCache,
                                       get_memsys)
-from repro.ggpu.engine.stepper import (KernelLaunchError, MachineState,
-                                       run_kernel, run_kernel_batch,
-                                       run_kernel_cohort)
+from repro.ggpu.engine.stepper import (KernelLaunchError, LaunchHandle,
+                                       MachineState, run_kernel,
+                                       run_kernel_async, run_kernel_batch,
+                                       run_kernel_batch_async,
+                                       run_kernel_cohort,
+                                       run_kernel_cohort_async)
 
 __all__ = [
     "GGPUConfig", "ScalarConfig", "MachineState", "KernelLaunchError",
+    "LaunchHandle",
     "run_kernel", "run_kernel_batch", "run_kernel_cohort",
+    "run_kernel_async", "run_kernel_batch_async", "run_kernel_cohort_async",
     "exec_alu", "select_alu", "branch_taken",
     "MemorySystem", "SharedCache", "BankedPerCUCache", "CacheResult",
     "MEMSYS_REGISTRY", "get_memsys",

@@ -34,11 +34,32 @@ Entry points:
 Per-launch cycles/stats are exact in all three: padding a program with
 HALT words and a memory image with zeros is state-invisible to the
 machine, and cohort elements are fully isolated.
+
+**Async launch pipeline.** Every entry point has an ``_async`` twin
+(``run_kernel_async`` / ``run_kernel_cohort_async`` /
+``run_kernel_batch_async``) that returns a ``LaunchHandle`` future
+immediately after dispatch instead of blocking on the device. The sync
+entry points are thin blocking wrappers over the same jitted callables
+(``handle.results()`` right after dispatch), so both paths share one
+compile cache and are bit-exact by construction. Three properties make
+the async path cheap (DESIGN.md §Async launch pipeline):
+
+  * **donation** — the staged memory image (host copy + appended write
+    sink) is donated to XLA (``donate_argnums``), so the final memory
+    aliases the input buffer instead of allocating a second envelope.
+    Caller arrays are never donated: staging always copies host-side.
+  * **lazy, sliced download** — resolving a handle fetches only the tiny
+    ``done/cycles/stats/step`` arrays; memory is pulled on first access,
+    and a declared ``out_region=(lo, hi)`` downloads just that slice of
+    each launch's image (``(0, 0)``: cycles-only, no transfer at all).
+  * **async dispatch** — the handle returns while the device still runs,
+    so the caller can plan, stage, and dispatch the next launch during
+    the current one's compute (the serving scheduler's pipelined drain).
 """
 from __future__ import annotations
 
 import functools
-from typing import List, NamedTuple, Sequence, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -74,10 +95,12 @@ def _n_wavefronts(n_items: int, cfg: GGPUConfig) -> int:
 
 def _build_core(cfg: GGPUConfig, B: int, W: int, prog_len: int, msize: int,
                 ops, legacy: bool = False):
-    """Returns ``core(prog, mem_flat, n_items) -> MachineState`` for one
+    """Returns ``core(prog, mem_sink, n_items) -> MachineState`` for one
     static machine shape: ``B`` cohort elements of ``W`` wavefronts each,
-    ``mem_flat`` the concatenated (B*msize,) memory images. ``ops`` is the
-    static opcode set for decode specialization (None = unpruned);
+    ``mem_sink`` the concatenated (B*msize + 1,) memory images with the
+    write sink already appended (callers stage it host-side so the jitted
+    wrappers can donate the buffer — the final memory aliases it). ``ops``
+    is the static opcode set for decode specialization (None = unpruned);
     ``legacy`` selects the seed-faithful reference round."""
     L = cfg.wavefront
     n_cus = cfg.n_cus
@@ -106,7 +129,7 @@ def _build_core(cfg: GGPUConfig, B: int, W: int, prog_len: int, msize: int,
     def per_elem_sum(x):
         return jnp.sum(x.reshape(B, -1), axis=1).astype(jnp.int32)
 
-    def core(prog, mem_flat, n_items, msize_clip):
+    def core(prog, mem_sink, n_items, msize_clip):
         """``msize_clip`` is the launch's own memory size (traced): the
         address clip must bind at each launch's boundary, not the padded
         batch envelope, or an out-of-range access would read the padding
@@ -118,7 +141,7 @@ def _build_core(cfg: GGPUConfig, B: int, W: int, prog_len: int, msize: int,
             pc=jnp.zeros((B * W, L), jnp.int32),
             regs=jnp.zeros((B * W, isa.N_REGS, L), jnp.int32),
             done=~lane_valid,
-            mem=jnp.concatenate([mem_flat, jnp.zeros((1,), jnp.int32)]),
+            mem=mem_sink,
             tags=memsys.init_tags(cfg, B),
             cycles=jnp.zeros((B,), jnp.int32),
             stats=jnp.zeros((B, 4), jnp.int32),
@@ -220,26 +243,36 @@ def _build_core(cfg: GGPUConfig, B: int, W: int, prog_len: int, msize: int,
     return core
 
 
+# The memory argument of each jitted wrapper arrives with the write sink
+# already appended and is DONATED: the machine's final memory aliases the
+# staged input buffer (same shape/dtype), so a launch allocates one memory
+# envelope, not two. Staging (in the *_async entry points) always copies
+# host-side, so a caller's array is never invalidated.
+
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "W", "prog_len", "ops", "legacy"))
-def _run_single(prog, mem0, n_items, cfg, W, prog_len, ops, legacy=False):
-    msize = mem0.shape[0]
+                   static_argnames=("cfg", "W", "prog_len", "ops", "legacy"),
+                   donate_argnums=(1,))
+def _run_single(prog, mem_sink, n_items, cfg, W, prog_len, ops,
+                legacy=False):
+    msize = mem_sink.shape[0] - 1
     return _build_core(cfg, 1, W, prog_len, msize, ops, legacy)(
-        prog, mem0, n_items, jnp.asarray(msize, jnp.int32))
+        prog, mem_sink, n_items, jnp.asarray(msize, jnp.int32))
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "B", "W", "prog_len", "ops"))
-def _run_cohort(prog, mems_flat, n_items, cfg, B, W, prog_len, ops):
-    msize = mems_flat.shape[0] // B
+                   static_argnames=("cfg", "B", "W", "prog_len", "ops"),
+                   donate_argnums=(1,))
+def _run_cohort(prog, mems_sink, n_items, cfg, B, W, prog_len, ops):
+    msize = (mems_sink.shape[0] - 1) // B
     return _build_core(cfg, B, W, prog_len, msize, ops)(
-        prog, mems_flat, n_items, jnp.asarray(msize, jnp.int32))
+        prog, mems_sink, n_items, jnp.asarray(msize, jnp.int32))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "W", "prog_len", "ops"))
-def _run_batch(progs, mems, n_items, msizes, cfg, W, prog_len, ops):
-    core = _build_core(cfg, 1, W, prog_len, mems.shape[1], ops)
-    return jax.vmap(core)(progs, mems, n_items, msizes)
+@functools.partial(jax.jit, static_argnames=("cfg", "W", "prog_len", "ops"),
+                   donate_argnums=(1,))
+def _run_batch(progs, mems_sink, n_items, msizes, cfg, W, prog_len, ops):
+    core = _build_core(cfg, 1, W, prog_len, mems_sink.shape[1] - 1, ops)
+    return jax.vmap(core)(progs, mems_sink, n_items, msizes)
 
 
 class KernelLaunchError(RuntimeError):
@@ -268,6 +301,206 @@ def _info(cycles: int, stats, steps: int, cfg: GGPUConfig) -> dict:
     }
 
 
+Region = Optional[Tuple[int, int]]
+
+
+@functools.partial(jax.jit, static_argnames=("B", "msize", "lo", "hi"))
+def _slice_block(mem, B, msize, lo, hi):
+    """All launches' [lo, hi) regions of a flat cohort/single memory as one
+    fused (B, hi-lo) device computation — one dispatch per chunk."""
+    return mem[:B * msize].reshape(B, msize)[:, lo:hi]
+
+
+@functools.partial(jax.jit, static_argnames=("lo", "hi"))
+def _slice_batch(mem, lo, hi):
+    """All launches' [lo, hi) regions of a batched (N, M+1) memory."""
+    return mem[:, lo:hi]
+
+
+def _check_regions(regions: Optional[Sequence[Region]], B: int,
+                   sizes: Sequence[int]) -> Optional[List[Region]]:
+    """Validate per-launch output regions against each launch's own memory
+    size. ``None`` (no slicing) stays ``None`` so the full-image download
+    path is taken."""
+    if regions is None:
+        return None
+    regions = list(regions)
+    if len(regions) != B:
+        raise ValueError(f"out_regions has {len(regions)} entries for "
+                         f"{B} launches")
+    for r, size in zip(regions, sizes):
+        if r is None:
+            continue
+        lo, hi = r
+        if not (0 <= lo <= hi <= size):
+            raise ValueError(f"out_region {r} outside memory image "
+                             f"[0, {size})")
+    if all(r is None for r in regions):
+        return None
+    return regions
+
+
+class LaunchHandle:
+    """Future for one in-flight (possibly folded) kernel launch.
+
+    ``wait()`` blocks until the device retires the launch, fetching only
+    the tiny ``done/cycles/stats/step`` arrays, and raises
+    ``KernelLaunchError`` (with the failing position in ``index``) when a
+    launch hit ``max_steps``. The final memory stays device-resident until
+    asked for: ``mem(i)`` downloads launch ``i``'s image — the declared
+    ``out_region`` slice when one was given (``(0, 0)``: no transfer at
+    all), the full image otherwise. ``results()`` returns the same
+    ``(mem, info)`` pairs as the sync entry point, bit-exact.
+
+    ``donated`` is the staged device buffer the dispatch consumed; XLA
+    invalidates it at dispatch (the final memory aliases it), and the
+    handle never reads it — tests assert ``donated.is_deleted()``.
+    """
+
+    def __init__(self, final: MachineState, cfg: GGPUConfig, kind: str,
+                 B: int, msize: int, n_keep: Optional[Sequence[int]],
+                 regions: Optional[Sequence[Region]], batch_size:
+                 Optional[int], donated):
+        self._final = final
+        self._cfg = cfg
+        self._kind = kind
+        self._B = B
+        self._msize = msize
+        self._n_keep = list(n_keep) if n_keep is not None else None
+        self._regions = _check_regions(
+            regions, B, self._n_keep if self._n_keep is not None
+            else [msize] * B)
+        self._batch_size = batch_size
+        self.donated = donated
+        self._small = None                     # (cycles, stats, steps)
+        self._mem_full = None
+        self._mems: dict = {}
+
+    def __len__(self) -> int:
+        return self._B
+
+    def ready(self) -> bool:
+        """Non-blocking: has the device finished this dispatch?"""
+        try:
+            return bool(self._final.done.is_ready())
+        except AttributeError:                 # non-jax array (never async)
+            return True
+
+    def wait(self) -> "LaunchHandle":
+        """Block until retired; fetch only the small per-launch arrays.
+        Raises ``KernelLaunchError`` naming the first failing launch."""
+        if self._small is not None:
+            return self
+        f = self._final
+        done = np.asarray(f.done).reshape(self._B, -1)
+        if self._kind == "batch":
+            cycles = np.asarray(f.cycles)[:, 0]
+            stats = np.asarray(f.stats)[:, 0]
+            steps = np.asarray(f.step)[:, 0]
+        else:
+            cycles, stats, steps = (np.asarray(f.cycles),
+                                    np.asarray(f.stats), np.asarray(f.step))
+        for i in range(self._B):
+            if not done[i].all():
+                what = {"single": "kernel", "cohort": f"cohort kernel {i}",
+                        "batch": f"batched kernel {i}"}[self._kind]
+                raise KernelLaunchError(
+                    f"{what} hit max_steps without halting", i)
+        self._small = (cycles, stats, steps)
+        return self
+
+    # -- resolution ----------------------------------------------------------
+
+    def info(self, i: int = 0) -> dict:
+        cycles, stats, steps = self.wait()._small
+        info = _info(int(cycles[i]), stats[i], int(steps[i]), self._cfg)
+        if self._batch_size is not None:
+            info["batch_size"] = self._batch_size
+        return info
+
+    def infos(self) -> List[dict]:
+        return [self.info(i) for i in range(self._B)]
+
+    def mem(self, i: int = 0) -> np.ndarray:
+        """Launch ``i``'s final memory: the declared region slice when one
+        was given, the full image otherwise (downloaded once, cached).
+
+        Same-kernel chunks declare the same region for every launch, so
+        the uniform case collapses all downloads into **one** fused device
+        slice per chunk (``_slice_block``) instead of one dispatch per
+        launch."""
+        region = self._regions[i] if self._regions is not None else None
+        if region is None:
+            return self._full_mem(i)
+        if i not in self._mems:
+            lo, hi = region
+            if hi <= lo:
+                self._mems[i] = np.zeros(0, np.int32)
+            elif all(r == region for r in self._regions):
+                if self._kind == "batch":
+                    block = np.asarray(_slice_batch(self._final.mem, lo, hi))
+                else:
+                    block = np.asarray(_slice_block(
+                        self._final.mem, self._B, self._msize, lo, hi))
+                for j in range(self._B):
+                    self._mems[j] = block[j]
+            elif self._kind == "batch":
+                self._mems[i] = np.asarray(self._final.mem[i, lo:hi])
+            else:
+                base = i * self._msize
+                self._mems[i] = np.asarray(
+                    self._final.mem[base + lo:base + hi])
+        return self._mems[i]
+
+    def _full_mem(self, i: int) -> np.ndarray:
+        if self._mem_full is None:
+            m = np.asarray(self._final.mem)
+            if self._kind == "batch":
+                self._mem_full = m[:, :-1]
+            else:
+                self._mem_full = m[:-1].reshape(self._B, self._msize)
+        row = self._mem_full[i]
+        return row[:self._n_keep[i]] if self._n_keep is not None else row
+
+    def results(self) -> List[Tuple[np.ndarray, dict]]:
+        """All launches as (mem, info) pairs — exactly what the sync entry
+        point returns."""
+        return [(self.mem(i), self.info(i)) for i in range(self._B)]
+
+    def result(self) -> Tuple[np.ndarray, dict]:
+        """Single-launch convenience: the (mem, info) pair."""
+        if self._B != 1:
+            raise ValueError(f"handle holds {self._B} launches; "
+                             "use results()")
+        return self.mem(0), self.info(0)
+
+
+def _stage(mems: Sequence[np.ndarray]) -> jax.Array:
+    """Host-copy the image(s) plus the write-sink slot into one fresh
+    device buffer — the buffer the jitted wrapper donates."""
+    return jnp.asarray(np.concatenate(list(mems)
+                                      + [np.zeros(1, np.int32)]))
+
+
+def run_kernel_async(prog: np.ndarray, mem0: np.ndarray, n_items: int,
+                     cfg: GGPUConfig, *, out_region: Region = None,
+                     legacy: bool = False) -> LaunchHandle:
+    """Dispatch a single launch asynchronously; returns a ``LaunchHandle``
+    while the device still runs. ``out_region=(lo, hi)`` limits the
+    eventual memory download to that slice of the final image."""
+    prog = np.asarray(prog, np.int32)
+    mem0 = np.asarray(mem0, np.int32)
+    staged = _stage([mem0])
+    final = _run_single(
+        jnp.asarray(prog), staged,
+        jnp.asarray(int(n_items), jnp.int32), cfg,
+        _n_wavefronts(int(n_items), cfg), int(prog.shape[0]),
+        None if legacy else _static_ops(prog), legacy)
+    return LaunchHandle(final, cfg, "single", 1, mem0.shape[0], None,
+                        [out_region] if out_region is not None else None,
+                        None, staged)
+
+
 def run_kernel(prog: np.ndarray, mem0: np.ndarray, n_items: int,
                cfg: GGPUConfig, *, legacy: bool = False):
     """Execute a kernel. Returns (mem_final, info dict).
@@ -275,18 +508,33 @@ def run_kernel(prog: np.ndarray, mem0: np.ndarray, n_items: int,
     ``legacy=True`` runs the seed-faithful reference stepper (identical
     results and cycles, pre-refactor wall-clock) for differential testing
     and as the baseline of ``benchmarks.engine_bench``."""
+    return run_kernel_async(prog, mem0, n_items, cfg,
+                            legacy=legacy).result()
+
+
+def run_kernel_cohort_async(prog: np.ndarray, mems: Sequence[np.ndarray],
+                            n_items: int, cfg: GGPUConfig, *,
+                            out_regions: Optional[Sequence[Region]] = None
+                            ) -> LaunchHandle:
+    """Dispatch B same-kernel launches as one folded stepper call,
+    asynchronously. ``out_regions`` optionally declares one download slice
+    per launch (``None`` entries download that launch's full image)."""
     prog = np.asarray(prog, np.int32)
-    final = _run_single(
-        jnp.asarray(prog), jnp.asarray(mem0, jnp.int32),
-        jnp.asarray(int(n_items), jnp.int32), cfg,
+    mems = [np.asarray(m, np.int32) for m in mems]
+    if not mems:
+        raise ValueError("empty cohort")
+    msize = mems[0].shape[0]
+    if any(m.shape[0] != msize for m in mems):
+        raise ValueError("cohort memory images must share one shape")
+    B = len(mems)
+    staged = _stage(mems)
+    final = _run_cohort(
+        jnp.asarray(prog), staged,
+        jnp.asarray(int(n_items), jnp.int32), cfg, B,
         _n_wavefronts(int(n_items), cfg), int(prog.shape[0]),
-        None if legacy else _static_ops(prog), legacy)
-    if not bool(np.asarray(final.done).all()):
-        raise KernelLaunchError("kernel hit max_steps without halting")
-    cycles = int(np.asarray(final.cycles)[0])
-    return np.asarray(final.mem)[:-1], _info(
-        cycles, np.asarray(final.stats)[0], int(np.asarray(final.step)[0]),
-        cfg)
+        _static_ops(prog))
+    return LaunchHandle(final, cfg, "cohort", B, msize, None, out_regions,
+                        B, staged)
 
 
 def run_kernel_cohort(prog: np.ndarray, mems: Sequence[np.ndarray],
@@ -294,33 +542,42 @@ def run_kernel_cohort(prog: np.ndarray, mems: Sequence[np.ndarray],
                       ) -> List[Tuple[np.ndarray, dict]]:
     """Execute the same kernel over B memory images as one folded stepper
     call (B*W wavefronts, per-element accounting). Bit-exact per launch."""
-    prog = np.asarray(prog, np.int32)
-    mems = [np.asarray(m, np.int32) for m in mems]
+    mems = list(mems)                # materialize once: iterators welcome
     if not mems:
         return []
-    msize = mems[0].shape[0]
-    if any(m.shape[0] != msize for m in mems):
-        raise ValueError("cohort memory images must share one shape")
-    B = len(mems)
-    final = _run_cohort(
-        jnp.asarray(prog), jnp.asarray(np.concatenate(mems)),
-        jnp.asarray(int(n_items), jnp.int32), cfg, B,
-        _n_wavefronts(int(n_items), cfg), int(prog.shape[0]),
-        _static_ops(prog))
-    done = np.asarray(final.done).reshape(B, -1)
-    mem_f = np.asarray(final.mem)[:-1].reshape(B, msize)
-    cycles = np.asarray(final.cycles)
-    stats = np.asarray(final.stats)
-    steps = np.asarray(final.step)
-    out = []
-    for i in range(B):
-        if not done[i].all():
-            raise KernelLaunchError(
-                f"cohort kernel {i} hit max_steps without halting", i)
-        info = _info(int(cycles[i]), stats[i], int(steps[i]), cfg)
-        info["batch_size"] = B
-        out.append((mem_f[i], info))
-    return out
+    return run_kernel_cohort_async(prog, mems, n_items, cfg).results()
+
+
+def run_kernel_batch_async(progs: Sequence[np.ndarray],
+                           mems: Sequence[np.ndarray],
+                           n_items: Sequence[int], cfg: GGPUConfig, *,
+                           out_regions: Optional[Sequence[Region]] = None
+                           ) -> LaunchHandle:
+    """Dispatch N heterogeneous launches as one vmapped stepper call,
+    asynchronously (padding exactly as ``run_kernel_batch``)."""
+    if not (len(progs) == len(mems) == len(n_items)):
+        raise ValueError("progs, mems, n_items must have equal length")
+    if not progs:
+        raise ValueError("empty batch")
+    progs = [np.asarray(p, np.int32) for p in progs]
+    mems = [np.asarray(m, np.int32) for m in mems]
+    P = max(p.shape[0] for p in progs)
+    M = max(m.shape[0] for m in mems)
+    prog_b = np.stack([np.pad(p, ((0, P - p.shape[0]), (0, 0)))
+                       for p in progs])                  # HALT == all-zeros
+    # each row zero-padded to the envelope plus its own write-sink slot
+    mem_b = np.stack([np.pad(m, (0, M + 1 - m.shape[0])) for m in mems])
+    W = max(_n_wavefronts(int(n), cfg) for n in n_items)
+    ops = tuple(sorted(set().union(*(_static_ops(p) for p in progs))))
+    staged = jnp.asarray(mem_b)
+    final = _run_batch(
+        jnp.asarray(prog_b), staged,
+        jnp.asarray(np.asarray(n_items, np.int32)),
+        jnp.asarray(np.array([m.shape[0] for m in mems], np.int32)),
+        cfg, W, P, ops)
+    return LaunchHandle(final, cfg, "batch", len(progs), M,
+                        [m.shape[0] for m in mems], out_regions,
+                        len(progs), staged)
 
 
 def run_kernel_batch(progs: Sequence[np.ndarray],
@@ -334,35 +591,8 @@ def run_kernel_batch(progs: Sequence[np.ndarray],
     counts are exact (the padding is invisible to the machine — each
     launch's address clip still binds at its own memory size). Returns a
     list of (mem_final, info) in submission order."""
-    if not (len(progs) == len(mems) == len(n_items)):
-        raise ValueError("progs, mems, n_items must have equal length")
+    progs = list(progs)              # materialize once: iterators welcome
     if not progs:
         return []
-    progs = [np.asarray(p, np.int32) for p in progs]
-    mems = [np.asarray(m, np.int32) for m in mems]
-    P = max(p.shape[0] for p in progs)
-    M = max(m.shape[0] for m in mems)
-    prog_b = np.stack([np.pad(p, ((0, P - p.shape[0]), (0, 0)))
-                       for p in progs])                  # HALT == all-zeros
-    mem_b = np.stack([np.pad(m, (0, M - m.shape[0])) for m in mems])
-    W = max(_n_wavefronts(int(n), cfg) for n in n_items)
-    ops = tuple(sorted(set().union(*(_static_ops(p) for p in progs))))
-    final = _run_batch(
-        jnp.asarray(prog_b), jnp.asarray(mem_b),
-        jnp.asarray(np.asarray(n_items, np.int32)),
-        jnp.asarray(np.array([m.shape[0] for m in mems], np.int32)),
-        cfg, W, P, ops)
-    done = np.asarray(final.done)
-    mem_f = np.asarray(final.mem)[:, :-1]
-    cycles = np.asarray(final.cycles)[:, 0]
-    stats = np.asarray(final.stats)[:, 0]
-    steps = np.asarray(final.step)[:, 0]
-    out = []
-    for i, m in enumerate(mems):
-        if not done[i].all():
-            raise KernelLaunchError(
-                f"batched kernel {i} hit max_steps without halting", i)
-        info = _info(int(cycles[i]), stats[i], int(steps[i]), cfg)
-        info["batch_size"] = len(progs)
-        out.append((mem_f[i, :m.shape[0]], info))
-    return out
+    return run_kernel_batch_async(progs, list(mems), list(n_items),
+                                  cfg).results()

@@ -8,8 +8,8 @@ slot-batched LLM engine. See DESIGN.md §Serving subsystem.
 ``repro.serve.engine`` is the stable compatibility facade; the package
 modules are the API for new code.
 """
-from repro.serve.executors import (Executor, ExecutorStats, get_executor,
-                                   sim_key)
+from repro.serve.executors import (Executor, ExecutorStats, PendingChunk,
+                                   get_executor, sim_key)
 from repro.serve.fleet import Fleet, FleetDevice, pinned_makespan
 from repro.serve.llm import Engine, EngineConfig
 from repro.serve.request import KernelLaunch, Request, Result
@@ -20,6 +20,7 @@ from repro.serve.scheduler import (AdmissionError, Chunk, LaunchQueue,
 __all__ = [
     "AdmissionError", "Chunk", "Engine", "EngineConfig", "Executor",
     "ExecutorStats", "Fleet", "FleetDevice", "KernelLaunch", "LaunchQueue",
-    "Quarantined", "Request", "Result", "Scheduler", "get_executor",
+    "PendingChunk", "Quarantined", "Request", "Result", "Scheduler",
+    "get_executor",
     "pinned_makespan", "plan_chunks", "plan_waves", "sim_key", "wavefronts",
 ]

@@ -1,7 +1,7 @@
 """Compiled-executor layer: runs planned chunks on one device config.
 
-An ``Executor`` owns the three engine entry points for one ``GGPUConfig``
-and tracks the **envelope cache**: the set of compiled-stepper signatures
+An ``Executor`` owns the engine entry points for one ``GGPUConfig`` and
+tracks the **envelope cache**: the set of compiled-stepper signatures
 (chunk kind, batch size, wavefront count, program length, memory size,
 opcode set) this process has already traced. The jit cache inside
 ``repro.ggpu.engine`` is keyed on exactly these statics, so a chunk whose
@@ -9,25 +9,41 @@ envelope has been seen re-uses the compiled stepper — repeat serving
 traffic never re-traces — and the executor's hit/miss counters make that
 visible (``BENCH_serve.json`` reports the hit rate).
 
-``get_executor`` is a process-wide registry keyed by the **simulation
-key** — the config with ``freq_mhz`` normalized out, since frequency never
-enters the traced cycle computation but is a static jit argument (without
-normalization every distinct frequency target would recompile). The
-registry is shared with ``repro.dse.Evaluator``, whose cycle cache lives
-on the executor (``Executor.memo``): a DSE sweep and a serving fleet that
-touch the same config share both the compiled steppers and the memoized
-bench results.
+Every executor separates its **simulation config** (``sim_cfg``:
+``freq_mhz`` normalized out, the engine/compile key — frequency never
+enters the traced cycle computation, and as a static jit argument every
+distinct frequency target would otherwise recompile) from its
+**reporting config** (``cfg``: the caller's true frequency).
+``Result.info["time_us"]`` is always rescaled from cycles at the true
+``freq_mhz``, so results are frequency-faithful even off the shared
+registry — and executors at different frequency targets of the same
+design share one compiled-stepper cache.
+
+The launch path is **asynchronous**: ``submit`` stages and dispatches a
+chunk, returning a ``PendingChunk`` immediately while the device runs;
+``collect`` resolves it into ``Result``s (fetching only the small
+cycles/stats arrays, plus each request's declared ``out_region`` slice of
+memory — or the full image when none was declared). ``run`` is the
+blocking composition of the two, so sync and async callers share one code
+path and are bit-exact by construction.
+
+``get_executor`` is a process-wide registry keyed by the simulation key;
+callers with a non-default frequency get a lightweight view that shares
+the envelope cache, stats, and memo with the canonical executor but
+reports at the caller's true frequency. The registry is shared with
+``repro.dse.Evaluator``, whose cycle cache lives on the executor
+(``Executor.memo``): a DSE sweep and a serving fleet that touch the same
+config share both the compiled steppers and the memoized bench results.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
-import numpy as np
-
-from repro.ggpu.engine import GGPUConfig
-from repro.ggpu.engine import run_kernel, run_kernel_batch, run_kernel_cohort
-from repro.ggpu.engine.stepper import _n_wavefronts, _static_ops
+from repro.ggpu.engine import GGPUConfig, LaunchHandle
+from repro.ggpu.engine import (run_kernel_async, run_kernel_batch_async,
+                               run_kernel_cohort_async)
+from repro.ggpu.engine.stepper import _n_wavefronts
 
 from repro.serve.request import Request, Result
 
@@ -37,7 +53,9 @@ class ExecutorStats:
     """Counts *executed* work: a launch re-run after a failed chunk (the
     LaunchQueue restore-and-retry path, or quarantine survivors) counts
     each time it actually runs — these are simulator-activity stats, not
-    unique-request stats. hits + misses == dispatches always holds."""
+    unique-request stats. hits + misses == dispatches always holds, and
+    both are counted at *collection* (a dispatch that fails to halt is
+    retried with fewer members, a different envelope)."""
     launches: int = 0        # kernel launches executed
     dispatches: int = 0      # compiled-stepper calls issued
     trace_hits: int = 0      # dispatches whose envelope was already traced
@@ -69,82 +87,139 @@ def sim_key(cfg: GGPUConfig) -> GGPUConfig:
     return dataclasses.replace(cfg, freq_mhz=500.0)
 
 
+@dataclasses.dataclass
+class PendingChunk:
+    """One dispatched chunk in flight on the device, awaiting collection."""
+    handle: LaunchHandle
+    kind: str
+    reqs: List[Request]
+    env: tuple
+    traced: bool
+
+
 class Executor:
     """Runs (kind, requests) chunks on one config, with envelope-cache
-    accounting and a memo dict shared across its users (see module doc)."""
+    accounting and a memo dict shared across its users (see module doc).
 
-    def __init__(self, cfg: GGPUConfig):
-        self.cfg = cfg
-        self.stats = ExecutorStats()
-        self.memo: Dict[tuple, object] = {}   # e.g. the DSE cycle cache
-        self._envelopes: set = set()
+    ``share`` hands this executor another one's mutable state (envelope
+    cache, stats, memo) — how the registry builds frequency-faithful views
+    over one canonical executor per simulation key."""
+
+    def __init__(self, cfg: GGPUConfig, *,
+                 share: Optional["Executor"] = None):
+        self.cfg = cfg                    # reporting config (true freq)
+        self.sim_cfg = sim_key(cfg)       # engine/compile config
+        if share is None:
+            self.stats = ExecutorStats()
+            self.memo: Dict[tuple, object] = {}  # e.g. the DSE cycle cache
+            self._envelopes: set = set()
+        else:
+            if share.sim_cfg != self.sim_cfg:
+                raise ValueError("shared executors must agree on the "
+                                 "simulation key")
+            self.stats = share.stats
+            self.memo = share.memo
+            self._envelopes = share._envelopes
 
     # -- envelope accounting ------------------------------------------------
 
     def _envelope(self, kind: str, reqs: Sequence[Request]) -> tuple:
-        """The static signature the engine jit-caches on for this chunk."""
-        cfg = self.cfg
+        """The static signature the engine jit-caches on for this chunk
+        (opcode sets come from the requests' content-keyed cache)."""
+        cfg = self.sim_cfg
         if kind == "cohort":
             r = reqs[0]
             return ("cohort", len(reqs), _n_wavefronts(r.n_items, cfg),
-                    r.prog.shape[0], r.mem0.shape[0], _static_ops(r.prog))
+                    r.prog.shape[0], r.mem0.shape[0], r.static_ops())
         if kind == "batch":
             P = max(r.prog.shape[0] for r in reqs)
             M = max(r.mem0.shape[0] for r in reqs)
             W = max(_n_wavefronts(r.n_items, cfg) for r in reqs)
             ops = tuple(sorted(set().union(
-                *(_static_ops(r.prog) for r in reqs))))
+                *(r.static_ops() for r in reqs))))
             return ("batch", len(reqs), W, P, M, ops)
         r = reqs[0]
         return ("single", _n_wavefronts(r.n_items, cfg), r.prog.shape[0],
-                r.mem0.shape[0], _static_ops(r.prog))
+                r.mem0.shape[0], r.static_ops())
 
     # -- execution ----------------------------------------------------------
 
-    def run(self, kind: str, reqs: Sequence[Request]) -> List[Result]:
-        """Execute one planned chunk; returns per-launch ``Result``s in the
-        chunk's own order. Raises ``KernelLaunchError`` (with ``index``
-        naming the failing position) when a launch does not halt."""
+    def submit(self, kind: str, reqs: Sequence[Request]) -> PendingChunk:
+        """Stage and dispatch one planned chunk asynchronously; returns
+        while the device still runs. Pair with ``collect``."""
+        reqs = list(reqs)
         if len(reqs) == 1:
             kind = "single"          # a degenerate chunk needs no folding
         env = self._envelope(kind, reqs)
         traced = env in self._envelopes
-        if kind == "cohort":
-            outs = run_kernel_cohort(reqs[0].prog, [r.mem0 for r in reqs],
-                                     reqs[0].n_items, self.cfg)
-        elif kind == "batch":
-            outs = run_kernel_batch([r.prog for r in reqs],
-                                    [r.mem0 for r in reqs],
-                                    [r.n_items for r in reqs], self.cfg)
-        else:
-            mem, info = run_kernel(reqs[0].prog, reqs[0].mem0,
-                                   reqs[0].n_items, self.cfg)
-            info["batch_size"] = 1
-            outs = [(mem, info)]
-        # stats (including the hit/miss split) count successful dispatches
-        # only: a chunk that raises is retried with fewer members (a
-        # different envelope), so counting it would break the
-        # hits + misses == dispatches invariant
+        # the jit trace is paid HERE, at dispatch — record the envelope
+        # now so identical-envelope chunks dispatched ahead in the same
+        # pipeline window count as the hits they really are
         self._envelopes.add(env)
-        if traced:
+        regions = [r.out_region for r in reqs]
+        if all(r is None for r in regions):
+            regions = None
+        cfg = self.sim_cfg
+        if kind == "cohort":
+            h = run_kernel_cohort_async(
+                reqs[0].prog, [r.mem0 for r in reqs], reqs[0].n_items, cfg,
+                out_regions=regions)
+        elif kind == "batch":
+            h = run_kernel_batch_async(
+                [r.prog for r in reqs], [r.mem0 for r in reqs],
+                [r.n_items for r in reqs], cfg, out_regions=regions)
+        else:
+            h = run_kernel_async(
+                reqs[0].prog, reqs[0].mem0, reqs[0].n_items, cfg,
+                out_region=regions[0] if regions else None)
+        return PendingChunk(h, kind, reqs, env, traced)
+
+    def collect(self, pending: PendingChunk) -> List[Result]:
+        """Resolve a dispatched chunk into per-launch ``Result``s in the
+        chunk's own order, rescaling ``time_us`` to this executor's true
+        frequency. Raises ``KernelLaunchError`` (with ``index`` naming the
+        failing position) when a launch did not halt — stat counters move
+        on successful collections only, preserving hits + misses ==
+        dispatches (a failed chunk is retried with fewer members, a
+        different envelope)."""
+        outs = pending.handle.results()
+        if pending.traced:
             self.stats.trace_hits += 1
         else:
             self.stats.trace_misses += 1
-        self.stats.launches += len(reqs)
+        self.stats.launches += len(pending.reqs)
         self.stats.dispatches += 1
-        return [Result(mem, info) for mem, info in outs]
+        results = []
+        for mem, info in outs:
+            info.setdefault("batch_size", 1)
+            info["time_us"] = info["cycles"] / self.cfg.freq_mhz
+            results.append(Result(mem, info))
+        return results
+
+    def run(self, kind: str, reqs: Sequence[Request]) -> List[Result]:
+        """Execute one planned chunk synchronously (dispatch + collect)."""
+        return self.collect(self.submit(kind, reqs))
 
 
 # -- process-wide registry (shared with repro.dse.Evaluator) ----------------
 
-_EXECUTORS: Dict[GGPUConfig, Executor] = {}
+_EXECUTORS: Dict[GGPUConfig, Executor] = {}       # canonical, by sim key
+_VIEWS: Dict[GGPUConfig, Executor] = {}           # frequency-faithful views
 
 
 def get_executor(cfg: GGPUConfig) -> Executor:
-    """The shared executor for ``cfg``'s simulation key. Callers that need
-    frequency-faithful ``info['time_us']`` (e.g. fleet devices) should hold
-    their own ``Executor(cfg)`` instead and restate nothing."""
+    """The shared executor for ``cfg``'s simulation key, reporting at
+    ``cfg``'s true frequency: a non-default-frequency caller gets a view
+    sharing the canonical executor's compiled-envelope cache, stats, and
+    memo, with ``time_us`` rescaled from cycles at the caller's
+    ``freq_mhz``."""
     key = sim_key(cfg)
-    if key not in _EXECUTORS:
-        _EXECUTORS[key] = Executor(key)
-    return _EXECUTORS[key]
+    canon = _EXECUTORS.get(key)
+    if canon is None:
+        canon = _EXECUTORS.setdefault(key, Executor(key))
+    if cfg == key:
+        return canon
+    view = _VIEWS.get(cfg)
+    if view is None:
+        view = _VIEWS.setdefault(cfg, Executor(cfg, share=canon))
+    return view

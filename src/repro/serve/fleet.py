@@ -107,15 +107,20 @@ class Fleet:
     def drain(self, budget: Optional[int] = None) -> List[Result]:
         """Drain every device (``budget`` applies per device); returns the
         completed results in fleet-ticket order, each stamped with
-        ``info['device']`` and the fleet ``info['ticket']``. Actual
+        ``info['device']`` and the fleet ``info['ticket']``. Every
+        device's chunks are **dispatched before any device is collected**,
+        so the whole fleet's work is in flight together and one device's
+        download/collection never serializes another's compute. Actual
         service times update the device loads (replacing the estimate the
         router charged at submit time, so cold-start error never skews
         later placements) and the learned per-kernel model. Launches the
         device scheduler quarantined surface in ``Fleet.quarantined``
         under their fleet ticket — they produce no result."""
+        for dev in self.devices:
+            dev.scheduler.dispatch(budget)
         out: List[Result] = []
         for dev in self.devices:
-            for res in dev.scheduler.drain(budget):
+            for res in dev.scheduler.collect():
                 local = res.info["ticket"]
                 t_us = res.info["cycles"] / dev.cfg.freq_mhz
                 dev.busy_us += t_us

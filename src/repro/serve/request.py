@@ -15,14 +15,31 @@ tag)`` construction is unchanged.
 ``run_kernel`` returns, so code that unpacks ``mem, info = result`` keeps
 working. The serving layer adds ``info["ticket"]``, ``info["batch_size"]``
 (how many launches shared the dispatch) and ``info["tag"]`` (when set).
+
+A request may declare an ``out_region=(lo, hi)``: the half-open slice of
+the final memory image the caller actually wants back. The async launch
+path then downloads only that slice (``Result.mem`` holds it), and
+``(0, 0)`` means cycles-only — no memory transfer at all (how the DSE
+evaluator collects). Without a region, ``Result.mem`` is the full image,
+bit-exact with direct ``run_kernel``.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
-from typing import NamedTuple
+from typing import NamedTuple, Optional, Tuple
 
 import numpy as np
+
+
+@functools.lru_cache(maxsize=4096)
+def _static_ops_cached(prog_bytes: bytes, width: int) -> tuple:
+    """Content-keyed twin of ``engine.stepper._static_ops``: serving
+    traffic re-dispatches the same few programs forever, so the opcode
+    set is computed once per program *content*, not once per chunk."""
+    prog = np.frombuffer(prog_bytes, np.int32).reshape(-1, width)
+    return tuple(sorted({int(o) for o in prog[:, 0]}))
 
 
 @dataclasses.dataclass
@@ -35,16 +52,32 @@ class Request:
     priority: int = 0            # higher drains earlier
     deadline_us: float = math.inf  # modeled-time deadline (EDF tie-break)
     ticket: int = -1             # assigned by the scheduler at submit
+    out_region: Optional[Tuple[int, int]] = None  # download slice (lo, hi)
 
     def __post_init__(self):
         self.prog = np.asarray(self.prog, np.int32)
         self.mem0 = np.asarray(self.mem0, np.int32)
         self.n_items = int(self.n_items)
+        if self.out_region is not None:
+            # validate at admission: a malformed region must bounce the
+            # submit (per-request, handleable), not poison every later
+            # drain from inside the dispatch path
+            lo, hi = self.out_region
+            if not (0 <= lo <= hi <= self.mem0.shape[0]):
+                raise ValueError(
+                    f"out_region {self.out_region} outside memory image "
+                    f"[0, {self.mem0.shape[0]})")
 
     def kernel_key(self) -> tuple:
         """Same-kernel identity: launches sharing this key fold into one
         cohort stepper call (program, item count, memory shape)."""
         return (self.prog.tobytes(), self.n_items, self.mem0.shape[0])
+
+    def static_ops(self) -> tuple:
+        """The program's opcode set (the decode-specialization jit static),
+        via a process-wide content-keyed cache — repeat traffic never
+        rescans its program."""
+        return _static_ops_cached(self.prog.tobytes(), self.prog.shape[1])
 
 
 # compatibility alias: the pre-package launch record

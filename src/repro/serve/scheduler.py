@@ -19,6 +19,16 @@ flush. A launch that fails (hits ``max_steps``) is moved to
 ``quarantined`` — its chunk's survivors are re-run and still complete in
 the same drain; nothing is aborted and nothing must be manually discarded.
 
+``drain`` is **pipelined**: it is ``dispatch(budget)`` (plan and
+asynchronously stage + dispatch every budgeted chunk, so chunk *k+1* is
+planned, padded, and uploaded while chunk *k* still runs on the device)
+followed by ``collect()`` (resolve the in-flight queue in dispatch order,
+quarantining failures per launch). ``max_inflight`` bounds how many
+dispatched chunks may be outstanding before the oldest is collected —
+the pipeline depth. Results are bit-exact with the serial path at any
+depth; ``Fleet.drain`` uses the split API directly to dispatch to every
+device before collecting from any.
+
 ``LaunchQueue`` remains the pre-package interface with its original
 strict semantics (whole-flush raise + restore on failure); see the class
 docstring. New code should use ``Scheduler``/``Fleet`` directly.
@@ -27,12 +37,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.ggpu.engine import GGPUConfig, KernelLaunchError
-from repro.serve.executors import Executor
+from repro.serve.executors import Executor, PendingChunk
 from repro.serve.request import Request, Result
 
 
@@ -120,19 +131,24 @@ class Scheduler:
 
     def __init__(self, cfg: Optional[GGPUConfig] = None, *,
                  executor: Optional[Executor] = None, max_batch: int = 64,
-                 max_pending: Optional[int] = None):
+                 max_pending: Optional[int] = None, max_inflight: int = 8):
         if (cfg is None) == (executor is None):
             raise ValueError("pass exactly one of cfg or executor")
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
         self.executor = executor if executor is not None else Executor(cfg)
         self.cfg = self.executor.cfg
         self.max_batch = max_batch
         self.max_pending = max_pending
+        self.max_inflight = max_inflight
         self._pending: Dict[int, Request] = {}   # ticket -> request (FIFO)
         self._next_ticket = 0
         self.quarantined: Dict[int, Quarantined] = {}
         self._completed: List[Result] = []       # buffered across failures
+        self._inflight: Deque[PendingChunk] = deque()
+        self._inflight_tickets: set = set()
 
     def __len__(self) -> int:
         return len(self._pending)
@@ -145,10 +161,14 @@ class Scheduler:
 
     def submit(self, prog: np.ndarray, mem0: np.ndarray, n_items: int,
                tag: str = "", priority: int = 0,
-               deadline_us: float = math.inf) -> int:
-        """Admit a launch; returns its (monotonic) ticket."""
+               deadline_us: float = math.inf,
+               out_region: Optional[Tuple[int, int]] = None) -> int:
+        """Admit a launch; returns its (monotonic) ticket. ``out_region``
+        optionally declares the slice of the final memory image the caller
+        wants back (``(0, 0)``: cycles-only, no download)."""
         return self.submit_request(Request(prog, mem0, n_items, tag,
-                                           priority, deadline_us))
+                                           priority, deadline_us,
+                                           out_region=out_region))
 
     def submit_request(self, req: Request) -> int:
         if self.max_pending is not None \
@@ -167,24 +187,16 @@ class Scheduler:
 
     # -- drain --------------------------------------------------------------
 
-    def drain(self, budget: Optional[int] = None) -> List[Result]:
-        """Serve pending work: plan chunks over the current pending set and
-        execute them in planned order until ``budget`` launches have been
-        taken off the queue (``None``: everything). Returns the completed
-        ``Result``s of this call in ticket order; poisoned launches land in
-        ``quarantined`` (they count against the budget but produce no
-        result). Per-launch results are bit-exact with direct
-        ``run_kernel`` regardless of how submissions interleave with
-        drains.
-
-        Unexpected failures (anything other than a launch hitting
-        ``max_steps``) propagate, but lose no work: requests leave
-        ``_pending`` only when they complete or are quarantined, and
-        completed results are buffered on the scheduler until a drain
-        returns — so after an interrupt or a malformed launch, the next
-        ``drain`` resumes with everything still queued plus the results
-        already computed."""
-        items = list(self._pending.values())
+    def dispatch(self, budget: Optional[int] = None) -> int:
+        """Plan chunks over the pending-but-not-in-flight set and dispatch
+        them asynchronously until ``budget`` launches have been staged
+        (``None``: everything); returns how many launches were dispatched.
+        Dispatch returns while the device still runs — staging/padding of
+        chunk *k+1* overlaps chunk *k*'s compute. When more than
+        ``max_inflight`` chunks are outstanding the oldest is collected
+        (into the completed buffer) to bound the pipeline."""
+        items = [r for r in self._pending.values()
+                 if r.ticket not in self._inflight_tickets]
         chunks = plan_chunks(items, self.cfg, self.max_batch)
         taken = 0
         for chunk in chunks:
@@ -192,30 +204,91 @@ class Scheduler:
                 break
             reqs = [items[i] for i in chunk.members]
             taken += len(reqs)
-            self._completed.extend(
-                self._run_quarantining(chunk.kind, list(reqs)))
+            try:
+                # shrink the window BEFORE dispatching so ``max_inflight``
+                # bounds simultaneous in-flight chunks: 1 = strictly serial
+                # (collect each chunk before the next is staged — the sync
+                # reference), N = an N-deep dispatch-ahead pipeline
+                while len(self._inflight) >= self.max_inflight:
+                    self._collect_oldest()
+                pending = self.executor.submit(chunk.kind, reqs)
+                self._inflight.append(pending)
+                self._inflight_tickets.update(r.ticket for r in reqs)
+            except BaseException:
+                self._abandon_inflight()
+                raise
+        return taken
+
+    def collect(self) -> List[Result]:
+        """Resolve every in-flight chunk (dispatch order) and return all
+        results completed since the last collection, in ticket order;
+        poisoned launches land in ``quarantined``."""
+        try:
+            while self._inflight:
+                self._collect_oldest()
+        except BaseException:
+            self._abandon_inflight()
+            raise
         out, self._completed = self._completed, []
         out.sort(key=lambda r: r.info["ticket"])
         return out
+
+    def drain(self, budget: Optional[int] = None) -> List[Result]:
+        """Serve pending work: plan chunks over the current pending set and
+        execute them in planned order until ``budget`` launches have been
+        taken off the queue (``None``: everything) — dispatching ahead of
+        collection (see ``dispatch``/``collect``). Returns the completed
+        ``Result``s of this call in ticket order; poisoned launches land in
+        ``quarantined`` (they count against the budget but produce no
+        result). Per-launch results are bit-exact with direct
+        ``run_kernel`` regardless of how submissions interleave with
+        drains or how deep the pipeline runs.
+
+        Unexpected failures (anything other than a launch hitting
+        ``max_steps``) propagate, but lose no work: requests leave
+        ``_pending`` only when they complete or are quarantined, in-flight
+        chunks are abandoned back to pending, and completed results are
+        buffered on the scheduler until a drain returns — so after an
+        interrupt or a malformed launch, the next ``drain`` resumes with
+        everything still queued plus the results already computed."""
+        self.dispatch(budget)
+        return self.collect()
 
     def flush(self) -> List[Result]:
         """Monolithic drain of everything pending."""
         return self.drain()
 
-    def _run_quarantining(self, kind: str, reqs: List[Request]
-                          ) -> List[Result]:
-        """Execute one chunk; on failure isolate the blamed launch into
-        ``quarantined`` and re-run the survivors until the chunk completes.
-        Survivor results stay bit-exact: cohort/batch folding is per-launch
-        exact at any membership."""
+    def _abandon_inflight(self) -> None:
+        """Drop in-flight chunks after an unexpected failure: their
+        requests are still pending, so the next dispatch re-plans them —
+        no work is lost, nothing is double-served."""
+        self._inflight.clear()
+        self._inflight_tickets.clear()
+
+    def _collect_oldest(self) -> None:
+        pending = self._inflight.popleft()
+        for r in pending.reqs:
+            self._inflight_tickets.discard(r.ticket)
+        self._completed.extend(self._collect_quarantining(pending))
+
+    def _collect_quarantining(self, pending: PendingChunk) -> List[Result]:
+        """Collect one chunk; on failure isolate the blamed launch into
+        ``quarantined`` and re-dispatch the survivors until the chunk
+        completes. Survivor results stay bit-exact: cohort/batch folding
+        is per-launch exact at any membership."""
         out: List[Result] = []
-        while reqs:
+        while True:
+            reqs = pending.reqs
             try:
-                results = self.executor.run(kind, reqs)
+                results = self.executor.collect(pending)
             except KernelLaunchError as exc:
-                bad = reqs.pop(exc.index)
+                bad = reqs[exc.index]
+                survivors = reqs[:exc.index] + reqs[exc.index + 1:]
                 del self._pending[bad.ticket]
                 self.quarantined[bad.ticket] = Quarantined(bad, exc)
+                if not survivors:
+                    return out
+                pending = self.executor.submit(pending.kind, survivors)
                 continue
             for req, res in zip(reqs, results):
                 res.info["ticket"] = req.ticket
@@ -224,7 +297,6 @@ class Scheduler:
                 del self._pending[req.ticket]
                 out.append(res)
             return out
-        return out
 
 
 class LaunchQueue:

@@ -85,6 +85,17 @@ def test_serve_cache_and_occupancy_exact(serve_base):
                for v in check_artifacts(fresh, serve_base))
 
 
+def test_serve_async_speedup_gate(serve_base):
+    """A pipelined drain that stops beating the sync serial drain by
+    ASYNC_MIN_SPEEDUP fails the gate regardless of the baseline value."""
+    from benchmarks.serve_bench import ASYNC_MIN_SPEEDUP
+    assert serve_base["async_speedup"] >= ASYNC_MIN_SPEEDUP
+    fresh = copy.deepcopy(serve_base)
+    fresh["async_speedup"] = ASYNC_MIN_SPEEDUP - 0.1
+    violations = check_artifacts(fresh, serve_base)
+    assert any("async_speedup" in v for v in violations), violations
+
+
 def test_serve_host_throughput_band(serve_base):
     fresh = copy.deepcopy(serve_base)
     fresh["launches_per_sec"] = serve_base["launches_per_sec"] / 2

@@ -229,11 +229,12 @@ def test_launch_queue_drains_in_ticket_order(monkeypatch):
             return fn(*args, **kw)
         return wrapper
 
-    monkeypatch.setattr(sx, "run_kernel", spy("single", sx.run_kernel))
-    monkeypatch.setattr(sx, "run_kernel_cohort",
-                        spy("cohort", sx.run_kernel_cohort))
-    monkeypatch.setattr(sx, "run_kernel_batch",
-                        spy("batch", sx.run_kernel_batch))
+    monkeypatch.setattr(sx, "run_kernel_async",
+                        spy("single", sx.run_kernel_async))
+    monkeypatch.setattr(sx, "run_kernel_cohort_async",
+                        spy("cohort", sx.run_kernel_cohort_async))
+    monkeypatch.setattr(sx, "run_kernel_batch_async",
+                        spy("batch", sx.run_kernel_batch_async))
 
     cfg = GGPUConfig(n_cus=2)
     q = LaunchQueue(cfg)

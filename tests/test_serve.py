@@ -181,29 +181,31 @@ def test_fleet_surfaces_quarantined_launches():
 
 def test_scheduler_drain_loses_nothing_on_unexpected_failure():
     """A non-launch failure mid-drain (not a max_steps quarantine) must
-    not lose work: unexecuted requests stay pending, and results already
-    computed in the same drain are buffered for the next one."""
+    not lose work: in-flight and unexecuted requests stay pending, and
+    results already computed in the same drain are buffered for the next
+    one."""
     b = SMALL["copy"]()
     fir = SMALL["fir"]()
     s = Scheduler(CFG)
     t0 = s.submit(b.gpu_prog, b.gpu_mem, b.gpu_items)        # cohort of 2
     t1 = s.submit(b.gpu_prog, _variant_mem(b, 1), b.gpu_items)
     t2 = s.submit(fir.gpu_prog, fir.gpu_mem, fir.gpu_items)  # later single
-    real_run = s.executor.run
+    real_collect = s.executor.collect
     calls = []
 
-    def explode_on_second(kind, reqs):
-        calls.append(kind)
+    def explode_on_second(pending):
+        calls.append(pending.kind)
         if len(calls) == 2:
             raise ValueError("malformed launch")
-        return real_run(kind, reqs)
+        return real_collect(pending)
 
-    s.executor.run = explode_on_second
+    s.executor.collect = explode_on_second
     with pytest.raises(ValueError):
         s.drain()
-    # the cohort completed (buffered), the single is still pending
+    # the cohort completed (buffered); the single — already dispatched and
+    # in flight when the failure hit — is abandoned back to pending
     assert s.pending_tickets == [t2]
-    s.executor.run = real_run
+    s.executor.collect = real_collect
     results = s.drain()
     assert [r.info["ticket"] for r in results] == [t0, t1, t2]
     for t, (p, m, n) in [(t0, (b.gpu_prog, b.gpu_mem, b.gpu_items)),
