@@ -7,7 +7,7 @@ CI runs the ``dse-smoke`` / ``serve-smoke`` jobs, then::
 
 and fails the build on any violation, so a perf regression breaks CI
 instead of uploading quietly. The artifact kind is auto-detected from the
-``schema`` field (``ggpu-dse/1`` / ``ggpu-serve/2``).
+``schema`` field (``ggpu-dse/1`` / ``ggpu-serve/3``).
 
 Tolerance bands per metric class:
 
@@ -39,7 +39,7 @@ import sys
 from typing import List, Optional
 
 DSE_SCHEMA = "ggpu-dse/1"
-SERVE_SCHEMA = "ggpu-serve/2"
+SERVE_SCHEMA = "ggpu-serve/3"
 
 
 def _band(violations: List[str], name: str, fresh, base, tol: float):
@@ -110,9 +110,10 @@ def check_serve(fresh: dict, base: dict, tol: float,
     _exact(v, "schema", fresh.get("schema"), base.get("schema"))
     # absolute health invariants: one definition, shared with the
     # benchmark harness's own exit-code check (benchmarks.run --serve).
-    # This includes the async-beats-sync gate: a fresh artifact whose
-    # pipelined drain does not clear ASYNC_MIN_SPEEDUP over the sync
-    # serial drain fails the build.
+    # This includes the async-beats-sync gate, the sharded bit-exactness
+    # gate, the >= SHARDED_MIN_SPEEDUP gate (enforced only when the fresh
+    # run had >= 8 simulated devices — the fleet-smoke job), and the
+    # open-loop latency sanity checks.
     v += invariant_problems(fresh)
     _exact(v, "batch_occupancy", fresh.get("batch_occupancy"),
            base.get("batch_occupancy"))
@@ -132,6 +133,24 @@ def check_serve(fresh: dict, base: dict, tol: float,
         _band(v, f"fleet.pinned_us.{dev}", fp[dev], bp[dev], tol)
     _ratio_band(v, "launches_per_sec", fresh.get("launches_per_sec"),
                 base.get("launches_per_sec"), host_tol)
+    # sharded throughput compares against baseline only when both runs
+    # actually sharded (the single-device serve-smoke job legitimately
+    # sees no speedup; the invariants above still enforce bit-exactness)
+    fs, bs = fresh.get("sharded", {}), base.get("sharded", {})
+    if fresh.get("n_devices", 1) > 1 and base.get("n_devices", 1) > 1:
+        _ratio_band(v, "sharded.launches_per_sec",
+                    fs.get("sharded", {}).get("launches_per_sec"),
+                    bs.get("sharded", {}).get("launches_per_sec"),
+                    host_tol)
+        _band(v, "sharded.speedup", fs.get("speedup"),
+              bs.get("speedup"), host_tol)
+    fl, bl = fresh.get("latency", {}), base.get("latency", {})
+    _ratio_band(v, "latency.p50_ms", fl.get("p50_ms"), bl.get("p50_ms"),
+                host_tol)
+    _ratio_band(v, "latency.p99_ms", fl.get("p99_ms"), bl.get("p99_ms"),
+                host_tol)
+    _ratio_band(v, "latency.rate_per_s", fl.get("rate_per_s"),
+                bl.get("rate_per_s"), host_tol)
     return v
 
 

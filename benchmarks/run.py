@@ -10,16 +10,22 @@ dispatch, batched launch queue, memory-system DSE sweep, unified DSE
 search) and writes the ``BENCH_dse.json`` artifact.
 ``--dse`` runs only the unified DSE Pareto sweep + artifact
 (``--dse --fast`` is the 2-point CI smoke).
-``--serve`` runs the serving-subsystem throughput + fleet-routing
-benchmark and writes the ``BENCH_serve.json`` artifact (schema
-``ggpu-serve/1``; ``--serve --fast`` is the CI ``serve-smoke`` job).
+``--serve`` runs the serving-subsystem benchmark — throughput,
+mesh-sharded scheduler vs single-device, open-loop Poisson tail latency,
+and fleet routing — and writes the ``BENCH_serve.json`` artifact (schema
+``ggpu-serve/3``; ``--serve --fast`` is the CI ``serve-smoke`` job, and
+the ``fleet-smoke`` job runs it again under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise real
+8-way sharding).
 ``--compiler`` runs the tensor-DSL compiler sweep (suite parity vs the
 hand-written benches + a compiled-workload DSE search) and writes
 ``BENCH_compiler.json`` (the nightly ``compiler-sweep`` job).
 
 Smoke invariants (fleet routing must beat both pins, the executor cache
-must be hitting, DSE frontiers must be non-empty, compiled kernels must
-be bit-exact) are re-checked after each artifact-producing mode; any
+must be hitting, sharded results must be bit-exact — and >= 1.5x faster
+at >= 8 simulated devices — DSE frontiers must be non-empty, compiled
+kernels must be bit-exact) are re-checked after each artifact-producing
+mode; any
 violation exits non-zero so CI fails instead of uploading a broken
 artifact.
 """

@@ -25,15 +25,17 @@ from repro.ggpu.engine.memsys import (MEMSYS_REGISTRY, BankedPerCUCache,
                                       CacheResult, MemorySystem, SharedCache,
                                       get_memsys)
 from repro.ggpu.engine.stepper import (KernelLaunchError, LaunchHandle,
-                                       MachineState, run_kernel,
-                                       run_kernel_async, run_kernel_batch,
+                                       MachineState, cohort_rows,
+                                       launch_shards,
+                                       run_kernel, run_kernel_async,
+                                       run_kernel_batch,
                                        run_kernel_batch_async,
                                        run_kernel_cohort,
                                        run_kernel_cohort_async)
 
 __all__ = [
     "GGPUConfig", "ScalarConfig", "MachineState", "KernelLaunchError",
-    "LaunchHandle",
+    "LaunchHandle", "cohort_rows", "launch_shards",
     "run_kernel", "run_kernel_batch", "run_kernel_cohort",
     "run_kernel_async", "run_kernel_batch_async", "run_kernel_cohort_async",
     "exec_alu", "select_alu", "branch_taken",

@@ -35,6 +35,31 @@ Per-launch cycles/stats are exact in all three: padding a program with
 HALT words and a memory image with zeros is state-invisible to the
 machine, and cohort elements are fully isolated.
 
+**Sharded execution.** The cohort and batch async entry points accept a
+``mesh=`` (a ``jax.sharding.Mesh``, e.g. ``repro.launch.mesh.
+make_launch_mesh()``): the leading launch axis is then sharded across
+the mesh's data-parallel axes with ``shard_map``, so a fleet of N
+simulated G-GPU instances maps onto M physical devices. Each device
+runs its *own* ``while_loop`` over its slice of the launches — there is
+no cross-device collective anywhere in the machine, so a device retires
+its shard as soon as its own launches halt. Launch counts that do not
+divide the shard count are padded (cohorts with a copy of the first
+image, batches with a 1-item HALT filler); padding is sliced away at
+resolution and never observable. Cohort sizes are additionally bucketed
+to powers of two per shard (``cohort_rows``, sharded or not), so
+open-loop serving traffic with arbitrary pending counts compiles
+O(log B) steppers rather than one per distinct cohort size — the
+compiled-envelope discipline that keeps tail latency flat under Poisson
+arrivals. Per-launch results, cycles, and stats
+are bit-exact vs the single-device path by construction: cohort
+elements are fully isolated, so a B-element cohort split into M local
+(B/M)-element cohorts computes identical bits. A mesh whose
+data-parallel extent is 1 (or ``mesh=None``) falls back to the
+single-device path. Partition specs come from the
+``repro.sharding.rules`` rule engine (the ``"launch"`` activation
+kind). CPU CI simulates 8 devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
 **Async launch pipeline.** Every entry point has an ``_async`` twin
 (``run_kernel_async`` / ``run_kernel_cohort_async`` /
 ``run_kernel_batch_async``) that returns a ``LaunchHandle`` future
@@ -275,6 +300,100 @@ def _run_batch(progs, mems_sink, n_items, msizes, cfg, W, prog_len, ops):
     return jax.vmap(core)(progs, mems_sink, n_items, msizes)
 
 
+# -- sharded execution over a device mesh -----------------------------------
+
+def launch_shards(mesh) -> int:
+    """How many ways the launch axis splits over ``mesh``: the product of
+    its data-parallel axis sizes (``None``: 1 — no sharding)."""
+    if mesh is None:
+        return 1
+    rules = _launch_rules(mesh)
+    return rules.axes_size(rules.dp_axes)
+
+
+def cohort_rows(B: int, shards: int = 1) -> int:
+    """Padded cohort size for a ``B``-launch cohort over ``shards``
+    devices: the per-shard slice is rounded up to a power of two, so the
+    staged rows are ``shards * 2^ceil(log2(ceil(B/shards)))``. The bucket
+    (not ``B``) is what the compiled stepper is traced for — open-loop
+    traffic with arbitrary pending counts compiles O(log B) steppers
+    instead of one per distinct cohort size, which is what keeps p99
+    launch latency flat under Poisson arrivals. Padding elements are
+    copies of the cohort's first image; every resolution path slices them
+    away before they can be observed."""
+    b_local = -(-B // shards)
+    return shards * (1 << max(0, b_local - 1).bit_length())
+
+
+@functools.lru_cache(maxsize=None)
+def _launch_rules(mesh):
+    """The sharding rule engine bound to ``mesh`` for launch placement
+    (no model axes in play: FSDP/sequence sharding off)."""
+    from repro.sharding.rules import make_rules
+    return make_rules(mesh, fsdp=False, seq_shard=False)
+
+
+def _launch_spec(mesh, ndim: int):
+    """PartitionSpec sharding a leading launch axis of an ``ndim``-array
+    over ``mesh``'s data-parallel axes (via the rule engine's ``launch``
+    activation kind — the shard count always divides here because entry
+    points pad first)."""
+    rules = _launch_rules(mesh)
+    shards = rules.axes_size(rules.dp_axes)
+    spec = rules.activation_spec("launch", (shards,) + (1,) * (ndim - 1))
+    assert spec is not None and spec[0] is not None
+    return spec
+
+
+def _launch_sharding(mesh, ndim: int):
+    return jax.sharding.NamedSharding(mesh, _launch_spec(mesh, ndim))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_cohort_fn(cfg, B_local, W, prog_len, msize, ops, mesh):
+    """Jitted sharded cohort stepper: every mesh shard runs an isolated
+    ``B_local``-element cohort over its row of the staged memory
+    (``(shards, B_local*msize + 1)`` — one write sink per shard). Each
+    shard's ``while_loop`` converges on its own launches only; there are
+    no collectives. The memory rows keep their leading device axis
+    (out-spec sharded), every other state leaf concatenates per-element
+    along axis 0 — exactly the unsharded cohort layout for ``shards *
+    B_local`` elements."""
+    from jax.experimental.shard_map import shard_map
+    core = _build_core(cfg, B_local, W, prog_len, msize, ops)
+    spec = _launch_spec(mesh, 1)
+    row_spec = _launch_spec(mesh, 2)
+
+    def local(prog, mem_rows, n_items):
+        st = core(prog, mem_rows[0], n_items, jnp.asarray(msize, jnp.int32))
+        return st._replace(mem=st.mem[None])
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(jax.sharding.PartitionSpec(), row_spec,
+                  jax.sharding.PartitionSpec()),
+        out_specs=MachineState(pc=spec, regs=spec, done=spec, mem=row_spec,
+                               tags=spec, cycles=spec, stats=spec,
+                               step=spec),
+        check_rep=False)              # while_loop has no replication rule
+    return jax.jit(fn, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_batch_fn(cfg, W, prog_len, msize, ops, mesh):
+    """Jitted sharded heterogeneous-batch stepper: the vmapped launch
+    axis is split across the mesh's data-parallel axes; each shard vmaps
+    the single-launch core over its local launches and loops until only
+    *they* halt."""
+    from jax.experimental.shard_map import shard_map
+    core = _build_core(cfg, 1, W, prog_len, msize, ops)
+    spec = _launch_spec(mesh, 1)
+    fn = shard_map(jax.vmap(core), mesh=mesh,
+                   in_specs=(spec, spec, spec, spec), out_specs=spec,
+                   check_rep=False)
+    return jax.jit(fn, donate_argnums=(1,))
+
+
 class KernelLaunchError(RuntimeError):
     """A launch did not halt within ``cfg.max_steps``. ``index`` is the
     position of the failing launch within the call's own argument list."""
@@ -317,6 +436,17 @@ def _slice_batch(mem, lo, hi):
     return mem[:, lo:hi]
 
 
+@functools.partial(jax.jit, static_argnames=("B", "msize", "lo", "hi"))
+def _slice_rows(mem_rows, B, msize, lo, hi):
+    """All launches' [lo, hi) regions of a sharded-cohort memory
+    (``(shards, B_local*msize + 1)`` device rows) as one fused device
+    computation — padding rows beyond ``B`` are dropped."""
+    shards = mem_rows.shape[0]
+    b_local = (mem_rows.shape[1] - 1) // msize
+    flat = mem_rows[:, :b_local * msize].reshape(shards * b_local, msize)
+    return flat[:B, lo:hi]
+
+
 def _check_regions(regions: Optional[Sequence[Region]], B: int,
                    sizes: Sequence[int]) -> Optional[List[Region]]:
     """Validate per-launch output regions against each launch's own memory
@@ -355,16 +485,24 @@ class LaunchHandle:
     ``donated`` is the staged device buffer the dispatch consumed; XLA
     invalidates it at dispatch (the final memory aliases it), and the
     handle never reads it — tests assert ``donated.is_deleted()``.
+
+    Sharded dispatches (``mesh=``) pad the launch axis up to the shard
+    count: ``rows`` is the padded element count, ``B`` stays the real
+    one, and every resolution path slices the padding away before it can
+    be observed. Kind ``"shard-cohort"`` additionally remembers that the
+    final memory is laid out as per-shard rows rather than one flat
+    image.
     """
 
     def __init__(self, final: MachineState, cfg: GGPUConfig, kind: str,
                  B: int, msize: int, n_keep: Optional[Sequence[int]],
                  regions: Optional[Sequence[Region]], batch_size:
-                 Optional[int], donated):
+                 Optional[int], donated, rows: Optional[int] = None):
         self._final = final
         self._cfg = cfg
         self._kind = kind
         self._B = B
+        self._rows = B if rows is None else rows
         self._msize = msize
         self._n_keep = list(n_keep) if n_keep is not None else None
         self._regions = _check_regions(
@@ -392,17 +530,22 @@ class LaunchHandle:
         if self._small is not None:
             return self
         f = self._final
-        done = np.asarray(f.done).reshape(self._B, -1)
+        # padding elements (rows > B) are sliced away before inspection:
+        # a sharded dispatch's fillers are never observable, including in
+        # the failure path
+        done = np.asarray(f.done).reshape(self._rows, -1)[:self._B]
         if self._kind == "batch":
-            cycles = np.asarray(f.cycles)[:, 0]
-            stats = np.asarray(f.stats)[:, 0]
-            steps = np.asarray(f.step)[:, 0]
+            cycles = np.asarray(f.cycles)[:self._B, 0]
+            stats = np.asarray(f.stats)[:self._B, 0]
+            steps = np.asarray(f.step)[:self._B, 0]
         else:
-            cycles, stats, steps = (np.asarray(f.cycles),
-                                    np.asarray(f.stats), np.asarray(f.step))
+            cycles = np.asarray(f.cycles)[:self._B]
+            stats = np.asarray(f.stats)[:self._B]
+            steps = np.asarray(f.step)[:self._B]
         for i in range(self._B):
             if not done[i].all():
                 what = {"single": "kernel", "cohort": f"cohort kernel {i}",
+                        "shard-cohort": f"cohort kernel {i}",
                         "batch": f"batched kernel {i}"}[self._kind]
                 raise KernelLaunchError(
                     f"{what} hit max_steps without halting", i)
@@ -439,6 +582,9 @@ class LaunchHandle:
             elif all(r == region for r in self._regions):
                 if self._kind == "batch":
                     block = np.asarray(_slice_batch(self._final.mem, lo, hi))
+                elif self._kind == "shard-cohort":
+                    block = np.asarray(_slice_rows(
+                        self._final.mem, self._B, self._msize, lo, hi))
                 else:
                     block = np.asarray(_slice_block(
                         self._final.mem, self._B, self._msize, lo, hi))
@@ -446,6 +592,12 @@ class LaunchHandle:
                     self._mems[j] = block[j]
             elif self._kind == "batch":
                 self._mems[i] = np.asarray(self._final.mem[i, lo:hi])
+            elif self._kind == "shard-cohort":
+                b_local = (self._final.mem.shape[1] - 1) // self._msize
+                shard, slot = divmod(i, b_local)
+                base = slot * self._msize
+                self._mems[i] = np.asarray(
+                    self._final.mem[shard, base + lo:base + hi])
             else:
                 base = i * self._msize
                 self._mems[i] = np.asarray(
@@ -457,8 +609,12 @@ class LaunchHandle:
             m = np.asarray(self._final.mem)
             if self._kind == "batch":
                 self._mem_full = m[:, :-1]
+            elif self._kind == "shard-cohort":
+                # per-shard rows: drop each row's write sink, flatten the
+                # shard axis back into one element-major image stack
+                self._mem_full = m[:, :-1].reshape(-1, self._msize)
             else:
-                self._mem_full = m[:-1].reshape(self._B, self._msize)
+                self._mem_full = m[:-1].reshape(self._rows, self._msize)
         row = self._mem_full[i]
         return row[:self._n_keep[i]] if self._n_keep is not None else row
 
@@ -514,11 +670,14 @@ def run_kernel(prog: np.ndarray, mem0: np.ndarray, n_items: int,
 
 def run_kernel_cohort_async(prog: np.ndarray, mems: Sequence[np.ndarray],
                             n_items: int, cfg: GGPUConfig, *,
-                            out_regions: Optional[Sequence[Region]] = None
-                            ) -> LaunchHandle:
+                            out_regions: Optional[Sequence[Region]] = None,
+                            mesh=None) -> LaunchHandle:
     """Dispatch B same-kernel launches as one folded stepper call,
     asynchronously. ``out_regions`` optionally declares one download slice
-    per launch (``None`` entries download that launch's full image)."""
+    per launch (``None`` entries download that launch's full image).
+    ``mesh`` shards the launch axis across the mesh's data-parallel
+    devices (see module doc); a 1-extent mesh falls back to the
+    single-device path."""
     prog = np.asarray(prog, np.int32)
     mems = [np.asarray(m, np.int32) for m in mems]
     if not mems:
@@ -527,14 +686,43 @@ def run_kernel_cohort_async(prog: np.ndarray, mems: Sequence[np.ndarray],
     if any(m.shape[0] != msize for m in mems):
         raise ValueError("cohort memory images must share one shape")
     B = len(mems)
-    staged = _stage(mems)
+    shards = launch_shards(mesh)
+    if shards > 1 and B > 1:
+        return _dispatch_cohort_sharded(prog, mems, n_items, cfg, mesh,
+                                        shards, out_regions)
+    rows = cohort_rows(B)
+    staged = _stage(mems + [mems[0]] * (rows - B))
     final = _run_cohort(
         jnp.asarray(prog), staged,
-        jnp.asarray(int(n_items), jnp.int32), cfg, B,
+        jnp.asarray(int(n_items), jnp.int32), cfg, rows,
         _n_wavefronts(int(n_items), cfg), int(prog.shape[0]),
         _static_ops(prog))
     return LaunchHandle(final, cfg, "cohort", B, msize, None, out_regions,
-                        B, staged)
+                        B, staged, rows=rows)
+
+
+def _dispatch_cohort_sharded(prog, mems, n_items, cfg, mesh, shards,
+                             out_regions) -> LaunchHandle:
+    """Shard a cohort's launch axis over ``mesh``: pad B up to the
+    ``cohort_rows`` bucket with copies of the first image (same kernel,
+    same halt behavior — sliced away at resolution), stage one memory row
+    per shard (its slice of the images plus a private write sink), and
+    dispatch the shard_map'd stepper once."""
+    B, msize = len(mems), mems[0].shape[0]
+    n_rows = cohort_rows(B, shards)
+    padded = mems + [mems[0]] * (n_rows - B)
+    b_local = n_rows // shards
+    rows = np.stack([
+        np.concatenate(padded[s * b_local:(s + 1) * b_local]
+                       + [np.zeros(1, np.int32)])
+        for s in range(shards)])
+    staged = jax.device_put(rows, _launch_sharding(mesh, 2))
+    final = _sharded_cohort_fn(
+        cfg, b_local, _n_wavefronts(int(n_items), cfg),
+        int(prog.shape[0]), msize, _static_ops(prog), mesh)(
+        jnp.asarray(prog), staged, jnp.asarray(int(n_items), jnp.int32))
+    return LaunchHandle(final, cfg, "shard-cohort", B, msize, None,
+                        out_regions, B, staged, rows=n_rows)
 
 
 def run_kernel_cohort(prog: np.ndarray, mems: Sequence[np.ndarray],
@@ -551,16 +739,29 @@ def run_kernel_cohort(prog: np.ndarray, mems: Sequence[np.ndarray],
 def run_kernel_batch_async(progs: Sequence[np.ndarray],
                            mems: Sequence[np.ndarray],
                            n_items: Sequence[int], cfg: GGPUConfig, *,
-                           out_regions: Optional[Sequence[Region]] = None
-                           ) -> LaunchHandle:
+                           out_regions: Optional[Sequence[Region]] = None,
+                           mesh=None) -> LaunchHandle:
     """Dispatch N heterogeneous launches as one vmapped stepper call,
-    asynchronously (padding exactly as ``run_kernel_batch``)."""
+    asynchronously (padding exactly as ``run_kernel_batch``). ``mesh``
+    shards the vmapped launch axis across the mesh's data-parallel
+    devices, padding N up to the shard count with trivial 1-item HALT
+    fillers (invisible at resolution); a 1-extent mesh falls back to the
+    single-device path."""
     if not (len(progs) == len(mems) == len(n_items)):
         raise ValueError("progs, mems, n_items must have equal length")
     if not progs:
         raise ValueError("empty batch")
     progs = [np.asarray(p, np.int32) for p in progs]
     mems = [np.asarray(m, np.int32) for m in mems]
+    n_items = [int(n) for n in n_items]
+    B = len(progs)
+    shards = launch_shards(mesh)
+    pad = -B % shards if shards > 1 and B > 1 else 0
+    if pad:
+        width = progs[0].shape[1]
+        progs = progs + [np.zeros((1, width), np.int32)] * pad  # HALT
+        mems = mems + [np.zeros(1, np.int32)] * pad
+        n_items = n_items + [1] * pad
     P = max(p.shape[0] for p in progs)
     M = max(m.shape[0] for m in mems)
     prog_b = np.stack([np.pad(p, ((0, P - p.shape[0]), (0, 0)))
@@ -569,15 +770,20 @@ def run_kernel_batch_async(progs: Sequence[np.ndarray],
     mem_b = np.stack([np.pad(m, (0, M + 1 - m.shape[0])) for m in mems])
     W = max(_n_wavefronts(int(n), cfg) for n in n_items)
     ops = tuple(sorted(set().union(*(_static_ops(p) for p in progs))))
-    staged = jnp.asarray(mem_b)
-    final = _run_batch(
-        jnp.asarray(prog_b), staged,
-        jnp.asarray(np.asarray(n_items, np.int32)),
-        jnp.asarray(np.array([m.shape[0] for m in mems], np.int32)),
-        cfg, W, P, ops)
-    return LaunchHandle(final, cfg, "batch", len(progs), M,
-                        [m.shape[0] for m in mems], out_regions,
-                        len(progs), staged)
+    n_arr = jnp.asarray(np.asarray(n_items, np.int32))
+    msz_arr = jnp.asarray(np.array([m.shape[0] for m in mems], np.int32))
+    if shards > 1 and B > 1:
+        sharding = _launch_sharding(mesh, 2)
+        staged = jax.device_put(mem_b, sharding)
+        final = _sharded_batch_fn(cfg, W, P, M, ops, mesh)(
+            jnp.asarray(prog_b), staged, n_arr, msz_arr)
+    else:
+        staged = jnp.asarray(mem_b)
+        final = _run_batch(jnp.asarray(prog_b), staged, n_arr, msz_arr,
+                           cfg, W, P, ops)
+    return LaunchHandle(final, cfg, "batch", B, M,
+                        [m.shape[0] for m in mems[:B]], out_regions,
+                        B, staged, rows=B + pad)
 
 
 def run_kernel_batch(progs: Sequence[np.ndarray],

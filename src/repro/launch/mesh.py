@@ -36,3 +36,19 @@ def make_host_mesh():
     import numpy as np
     return jax.sharding.Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
                              ("data", "model"))
+
+
+def make_launch_mesh(n_devices=None):
+    """1-D ``("data",)`` mesh over the available devices for data-parallel
+    G-GPU launch sharding (``repro.ggpu.engine`` ``mesh=`` entry points,
+    ``repro.serve`` executors/fleet). Uses every device by default; with
+    one device the mesh is a valid 1-extent mesh and every sharded entry
+    point falls back to the single-device path. CPU CI simulates devices
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` set
+    *before* importing jax."""
+    import numpy as np
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else int(n_devices)
+    if not (1 <= n <= len(devices)):
+        raise ValueError(f"need {n} devices, have {len(devices)}")
+    return jax.sharding.Mesh(np.asarray(devices[:n]), ("data",))

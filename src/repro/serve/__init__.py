@@ -12,6 +12,8 @@ from repro.serve.executors import (Executor, ExecutorStats, PendingChunk,
                                    get_executor, sim_key)
 from repro.serve.fleet import Fleet, FleetDevice, pinned_makespan
 from repro.serve.llm import Engine, EngineConfig
+from repro.serve.loadgen import (LoadResult, bursty_arrivals,
+                                 poisson_arrivals, replay)
 from repro.serve.request import KernelLaunch, Request, Result
 from repro.serve.scheduler import (AdmissionError, Chunk, LaunchQueue,
                                    Quarantined, Scheduler, plan_chunks,
@@ -20,7 +22,8 @@ from repro.serve.scheduler import (AdmissionError, Chunk, LaunchQueue,
 __all__ = [
     "AdmissionError", "Chunk", "Engine", "EngineConfig", "Executor",
     "ExecutorStats", "Fleet", "FleetDevice", "KernelLaunch", "LaunchQueue",
-    "PendingChunk", "Quarantined", "Request", "Result", "Scheduler",
-    "get_executor",
-    "pinned_makespan", "plan_chunks", "plan_waves", "sim_key", "wavefronts",
+    "LoadResult", "PendingChunk", "Quarantined", "Request", "Result",
+    "Scheduler", "bursty_arrivals", "get_executor",
+    "pinned_makespan", "plan_chunks", "plan_waves", "poisson_arrivals",
+    "replay", "sim_key", "wavefronts",
 ]

@@ -34,13 +34,27 @@ reports at the caller's true frequency. The registry is shared with
 ``repro.dse.Evaluator``, whose cycle cache lives on the executor
 (``Executor.memo``): a DSE sweep and a serving fleet that touch the same
 config share both the compiled steppers and the memoized bench results.
+
+An executor also carries its **placement**: a ``mesh`` shards every
+cohort/batch chunk's launch axis across the mesh's data-parallel devices
+(``repro.ggpu.engine`` ``mesh=`` entry points — one dispatch, each
+physical device stepping its own slice), and a ``device`` pins dispatch
+to one ``jax.Device`` (how a fleet puts different simulated configs on
+different physical devices so their compute genuinely overlaps). Both
+default off; with one JAX device everything degrades to the PR-5
+single-device behavior. ``shards`` reports the mesh's data-parallel
+extent (1 = unsharded) — schedulers scale their chunk planning by it.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
-from repro.ggpu.engine import GGPUConfig, LaunchHandle
+import jax
+
+from repro.ggpu.engine import (GGPUConfig, LaunchHandle, cohort_rows,
+                               launch_shards)
 from repro.ggpu.engine import (run_kernel_async, run_kernel_batch_async,
                                run_kernel_cohort_async)
 from repro.ggpu.engine.stepper import _n_wavefronts
@@ -103,12 +117,19 @@ class Executor:
 
     ``share`` hands this executor another one's mutable state (envelope
     cache, stats, memo) — how the registry builds frequency-faithful views
-    over one canonical executor per simulation key."""
+    over one canonical executor per simulation key. ``mesh`` and ``device``
+    set placement (module doc): a mesh shards cohort/batch launch axes
+    data-parallel, a device pins dispatch. Placement enters the envelope
+    key, so differently-placed chunks never alias a compiled signature."""
 
     def __init__(self, cfg: GGPUConfig, *,
-                 share: Optional["Executor"] = None):
+                 share: Optional["Executor"] = None,
+                 mesh=None, device=None):
         self.cfg = cfg                    # reporting config (true freq)
         self.sim_cfg = sim_key(cfg)       # engine/compile config
+        self.mesh = mesh
+        self.device = device
+        self.shards = launch_shards(mesh)
         if share is None:
             self.stats = ExecutorStats()
             self.memo: Dict[tuple, object] = {}  # e.g. the DSE cycle cache
@@ -125,22 +146,28 @@ class Executor:
 
     def _envelope(self, kind: str, reqs: Sequence[Request]) -> tuple:
         """The static signature the engine jit-caches on for this chunk
-        (opcode sets come from the requests' content-keyed cache)."""
+        (opcode sets come from the requests' content-keyed cache), suffixed
+        with this executor's placement — a sharded or pinned dispatch is a
+        different compiled artifact than the plain one."""
         cfg = self.sim_cfg
+        place = (self.shards, None if self.device is None else self.device.id)
         if kind == "cohort":
+            # the engine buckets cohort sizes (cohort_rows), so the traced
+            # envelope is the bucket, not the raw member count
             r = reqs[0]
-            return ("cohort", len(reqs), _n_wavefronts(r.n_items, cfg),
-                    r.prog.shape[0], r.mem0.shape[0], r.static_ops())
+            return ("cohort", cohort_rows(len(reqs), self.shards),
+                    _n_wavefronts(r.n_items, cfg),
+                    r.prog.shape[0], r.mem0.shape[0], r.static_ops(), place)
         if kind == "batch":
             P = max(r.prog.shape[0] for r in reqs)
             M = max(r.mem0.shape[0] for r in reqs)
             W = max(_n_wavefronts(r.n_items, cfg) for r in reqs)
             ops = tuple(sorted(set().union(
                 *(r.static_ops() for r in reqs))))
-            return ("batch", len(reqs), W, P, M, ops)
+            return ("batch", len(reqs), W, P, M, ops, place)
         r = reqs[0]
         return ("single", _n_wavefronts(r.n_items, cfg), r.prog.shape[0],
-                r.mem0.shape[0], r.static_ops())
+                r.mem0.shape[0], r.static_ops(), place)
 
     # -- execution ----------------------------------------------------------
 
@@ -160,18 +187,22 @@ class Executor:
         if all(r is None for r in regions):
             regions = None
         cfg = self.sim_cfg
-        if kind == "cohort":
-            h = run_kernel_cohort_async(
-                reqs[0].prog, [r.mem0 for r in reqs], reqs[0].n_items, cfg,
-                out_regions=regions)
-        elif kind == "batch":
-            h = run_kernel_batch_async(
-                [r.prog for r in reqs], [r.mem0 for r in reqs],
-                [r.n_items for r in reqs], cfg, out_regions=regions)
-        else:
-            h = run_kernel_async(
-                reqs[0].prog, reqs[0].mem0, reqs[0].n_items, cfg,
-                out_region=regions[0] if regions else None)
+        place = (jax.default_device(self.device) if self.device is not None
+                 else contextlib.nullcontext())
+        with place:
+            if kind == "cohort":
+                h = run_kernel_cohort_async(
+                    reqs[0].prog, [r.mem0 for r in reqs], reqs[0].n_items,
+                    cfg, out_regions=regions, mesh=self.mesh)
+            elif kind == "batch":
+                h = run_kernel_batch_async(
+                    [r.prog for r in reqs], [r.mem0 for r in reqs],
+                    [r.n_items for r in reqs], cfg, out_regions=regions,
+                    mesh=self.mesh)
+            else:
+                h = run_kernel_async(
+                    reqs[0].prog, reqs[0].mem0, reqs[0].n_items, cfg,
+                    out_region=regions[0] if regions else None)
         return PendingChunk(h, kind, reqs, env, traced)
 
     def collect(self, pending: PendingChunk) -> List[Result]:
@@ -204,22 +235,26 @@ class Executor:
 # -- process-wide registry (shared with repro.dse.Evaluator) ----------------
 
 _EXECUTORS: Dict[GGPUConfig, Executor] = {}       # canonical, by sim key
-_VIEWS: Dict[GGPUConfig, Executor] = {}           # frequency-faithful views
+_VIEWS: Dict[tuple, Executor] = {}                # freq/placement views
 
 
-def get_executor(cfg: GGPUConfig) -> Executor:
+def get_executor(cfg: GGPUConfig, *, mesh=None, device=None) -> Executor:
     """The shared executor for ``cfg``'s simulation key, reporting at
     ``cfg``'s true frequency: a non-default-frequency caller gets a view
     sharing the canonical executor's compiled-envelope cache, stats, and
     memo, with ``time_us`` rescaled from cycles at the caller's
-    ``freq_mhz``."""
+    ``freq_mhz``. ``mesh``/``device`` placement likewise produces a view
+    (keyed by placement) over the same canonical state — a sharded fleet
+    and an unsharded DSE sweep of one config share one stats/memo pool."""
     key = sim_key(cfg)
     canon = _EXECUTORS.get(key)
     if canon is None:
         canon = _EXECUTORS.setdefault(key, Executor(key))
-    if cfg == key:
+    if cfg == key and mesh is None and device is None:
         return canon
-    view = _VIEWS.get(cfg)
+    vkey = (cfg, mesh, device)
+    view = _VIEWS.get(vkey)
     if view is None:
-        view = _VIEWS.setdefault(cfg, Executor(cfg, share=canon))
+        view = _VIEWS.setdefault(
+            vkey, Executor(cfg, share=canon, mesh=mesh, device=device))
     return view

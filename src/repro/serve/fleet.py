@@ -17,6 +17,17 @@ the max over devices of the sum of served launch times (devices run in
 parallel); ``pinned_makespan`` prices the whole trace on one config for
 comparison. ``benchmarks/serve_bench.py`` records the routed-vs-pinned
 comparison in ``BENCH_serve.json``.
+
+**Physical placement.** Passing a ``mesh`` (``make_launch_mesh``) binds
+each simulated device to a contiguous slice of the mesh's physical JAX
+devices: a slice of one pins that scheduler's dispatches to that device
+(``Executor.device``), a wider slice becomes a sub-mesh so the
+scheduler's chunks shard their launch axis across it
+(``Executor.mesh``). Slices are proportional to remaining devices (every
+simulated device gets at least one physical device while supply lasts;
+with fewer physical than simulated devices the remainder runs unplaced
+on the default device). Bit-exactness is unchanged — placement moves *where*
+arrays live, never the traced computation.
 """
 from __future__ import annotations
 
@@ -33,12 +44,28 @@ from repro.serve.scheduler import Quarantined, Scheduler, wavefronts
 
 @dataclasses.dataclass
 class FleetDevice:
-    """One config in the fleet, with its scheduler and load accounting."""
+    """One config in the fleet, with its scheduler and load accounting.
+    ``mesh``/``device`` record the physical binding (either or neither)."""
     name: str
     cfg: GGPUConfig
     scheduler: Scheduler
     eta_us: float = 0.0        # modeled backlog the router sees (estimates)
     busy_us: float = 0.0       # actual modeled service time after drain
+    mesh: object = None        # sub-mesh when bound to >1 physical device
+    device: object = None      # pinned jax.Device when bound to exactly 1
+
+
+def _mesh_slices(mesh, n: int) -> List[list]:
+    """Partition a launch mesh's devices into ``n`` contiguous slices,
+    proportionally (largest first). Empty slices mean the fleet outnumbers
+    the physical devices; those simulated devices stay unplaced."""
+    devices = list(np.ravel(mesh.devices))
+    out, lo = [], 0
+    for i in range(n):
+        take = -((len(devices) - lo) // -(n - i))   # ceil of remaining/n
+        out.append(devices[lo:lo + take])
+        lo += take
+    return out
 
 
 class Fleet:
@@ -46,14 +73,29 @@ class Fleet:
 
     ``configs`` may be raw ``GGPUConfig``s or (name, config) pairs —
     e.g. ``[(p.label(), p.config) for p in search_result.frontier]``.
+    ``mesh`` binds simulated devices to physical ones (see module doc).
     """
 
-    def __init__(self, configs: Sequence, max_batch: int = 64):
+    def __init__(self, configs: Sequence, max_batch: int = 64, *,
+                 mesh=None):
+        configs = list(configs)
+        slices = _mesh_slices(mesh, len(configs)) if mesh is not None \
+            else [[] for _ in configs]
         self.devices: List[FleetDevice] = []
         for i, c in enumerate(configs):
             name, cfg = c if isinstance(c, tuple) else (f"dev{i}", c)
+            sub_mesh = sub_dev = None
+            if len(slices[i]) > 1:
+                import jax
+                sub_mesh = jax.sharding.Mesh(np.asarray(slices[i]),
+                                             ("data",))
+            elif len(slices[i]) == 1:
+                sub_dev = slices[i][0]
             self.devices.append(FleetDevice(
-                name, cfg, Scheduler(cfg, max_batch=max_batch)))
+                name, cfg,
+                Scheduler(cfg, max_batch=max_batch, mesh=sub_mesh,
+                          device=sub_dev),
+                mesh=sub_mesh, device=sub_dev))
         if len(self.devices) < 1:
             raise ValueError("fleet needs at least one device")
         names = [d.name for d in self.devices]
@@ -90,7 +132,12 @@ class Fleet:
                deadline_us: float = math.inf) -> int:
         """Route a launch to the device with the earliest modeled finish
         time; returns a fleet-level ticket."""
-        req = Request(prog, mem0, n_items, tag, priority, deadline_us)
+        return self.submit_request(
+            Request(prog, mem0, n_items, tag, priority, deadline_us))
+
+    def submit_request(self, req: Request) -> int:
+        """Route a prebuilt ``Request`` (the ``loadgen.replay`` target
+        protocol, shared with ``Scheduler.submit_request``)."""
         dev = min(self.devices,
                   key=lambda d: d.eta_us + self.estimate_us(d, req))
         est = self.estimate_us(dev, req)
@@ -145,13 +192,29 @@ class Fleet:
         return max(d.busy_us for d in self.devices)
 
     def report(self) -> dict:
+        """Fleet load report: besides placement counts and modeled busy
+        time, each device exposes its **utilization** (busy_us over the
+        fleet makespan — 1.0 on the critical-path device, lower on
+        underused ones), its live **queue depth** (pending requests plus
+        dispatched-but-uncollected chunks), the modeled backlog ``eta_us``
+        the router currently sees, and its physical ``shards`` width."""
         counts: Dict[str, int] = {d.name: 0 for d in self.devices}
         for name in self.placement.values():
             counts[name] += 1
+        makespan = self.makespan_us()
         return {
             "devices": [d.name for d in self.devices],
             "placement": counts,
             "busy_us": {d.name: round(d.busy_us, 3) for d in self.devices},
+            "utilization": {
+                d.name: round(d.busy_us / makespan, 3) if makespan else 0.0
+                for d in self.devices},
+            "queue_depth": {
+                d.name: len(d.scheduler) + d.scheduler.inflight_chunks
+                for d in self.devices},
+            "eta_us": {d.name: round(d.eta_us, 3) for d in self.devices},
+            "shards": {d.name: d.scheduler.executor.shards
+                       for d in self.devices},
             "makespan_us": round(self.makespan_us(), 3),
             "quarantined": sorted(self.quarantined),
         }

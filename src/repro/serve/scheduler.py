@@ -127,18 +127,28 @@ class Scheduler:
 
     Construct from a config (the scheduler owns a private ``Executor``) or
     hand it a shared one (e.g. ``executors.get_executor`` — how the DSE
-    evaluator and a serving fleet share compiled steppers)."""
+    evaluator and a serving fleet share compiled steppers). ``mesh`` and
+    ``device`` set the private executor's placement; a sharded executor
+    scales the planning width — chunks are planned at ``max_batch`` *per
+    shard* (``max_batch * executor.shards`` launches folded into one
+    dispatch), which is where the sharded throughput win comes from: one
+    dispatch covers what would otherwise be ``shards`` pipelined ones."""
 
     def __init__(self, cfg: Optional[GGPUConfig] = None, *,
                  executor: Optional[Executor] = None, max_batch: int = 64,
-                 max_pending: Optional[int] = None, max_inflight: int = 8):
+                 max_pending: Optional[int] = None, max_inflight: int = 8,
+                 mesh=None, device=None):
         if (cfg is None) == (executor is None):
             raise ValueError("pass exactly one of cfg or executor")
+        if executor is not None and (mesh is not None or device is not None):
+            raise ValueError("pass mesh/device only with cfg (placement "
+                             "belongs to the executor)")
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
-        self.executor = executor if executor is not None else Executor(cfg)
+        self.executor = executor if executor is not None \
+            else Executor(cfg, mesh=mesh, device=device)
         self.cfg = self.executor.cfg
         self.max_batch = max_batch
         self.max_pending = max_pending
@@ -156,6 +166,17 @@ class Scheduler:
     @property
     def pending_tickets(self) -> List[int]:
         return list(self._pending)
+
+    @property
+    def inflight_chunks(self) -> int:
+        """Dispatched-but-uncollected chunks — the live pipeline depth
+        (``Fleet.report`` surfaces it as per-device queue depth)."""
+        return len(self._inflight)
+
+    @property
+    def plan_batch(self) -> int:
+        """Effective planning width: ``max_batch`` launches per shard."""
+        return self.max_batch * self.executor.shards
 
     # -- admission ----------------------------------------------------------
 
@@ -197,7 +218,7 @@ class Scheduler:
         (into the completed buffer) to bound the pipeline."""
         items = [r for r in self._pending.values()
                  if r.ticket not in self._inflight_tickets]
-        chunks = plan_chunks(items, self.cfg, self.max_batch)
+        chunks = plan_chunks(items, self.cfg, self.plan_batch)
         taken = 0
         for chunk in chunks:
             if budget is not None and taken >= budget:

@@ -141,6 +141,13 @@ class ShardingRules:
             return P(dp_if(b), None, None, None)
         if kind == "tokens":             # (B, S)
             return P(dp_if(shape[0]), None)
+        if kind == "launch":             # (N, ...) batched G-GPU launches
+            # data-parallel fleet sharding: the G-GPU engine shards the
+            # leading launch axis of a cohort/batch dispatch over the dp
+            # axes (repro.ggpu.engine.stepper), falling back to
+            # replication when N does not divide — entry points pad
+            # first, so the fallback only fires for hand-built meshes
+            return P(dp_if(shape[0]), *([None] * (len(shape) - 1)))
         return None
 
     def named(self, spec: P) -> NamedSharding:

@@ -1,0 +1,297 @@
+"""Sharded fleet: the mesh-sharded scheduler must be bit-exact against
+the single-device path on every bench (including at one device, where
+every sharded entry point degrades gracefully), cohort bucketing must
+follow the power-of-two discipline the envelope cache depends on, the
+open-loop load generator must be deterministic per seed, and the fleet's
+mesh slicing and load report must hold their invariants. One subprocess
+test forces ``--xla_force_host_platform_device_count=8`` so real 8-way
+``shard_map`` execution is exercised even when the host suite runs on a
+single device."""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.ggpu import programs
+from repro.ggpu.engine import (GGPUConfig, cohort_rows, launch_shards,
+                               run_kernel)
+from repro.launch.mesh import make_launch_mesh
+from repro.serve import (Fleet, Request, Scheduler, bursty_arrivals,
+                         poisson_arrivals, replay)
+from repro.serve.fleet import _mesh_slices
+
+CFG = GGPUConfig(n_cus=2)
+STAT_KEYS = ("cycles", "instrs", "mem_ops", "hits", "misses", "steps")
+
+SMALL = {
+    "copy": lambda: programs._copy(16, 128),
+    "vec_mul": lambda: programs._vec_mul(16, 128),
+    "mat_mul": lambda: programs._mat_mul(4, 8),
+    "fir": lambda: programs._fir(16, 64),
+    "div_int": lambda: programs._div_int(16, 64),
+    "xcorr": lambda: programs._xcorr(16, 64),
+    "parallel_sel": lambda: programs._parallel_sel(16, 64),
+    "reduction": lambda: programs._reduction(64, 256),
+}
+
+
+def _variant_mem(b, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(-20, 20, b.gpu_mem.shape[0]).astype(np.int32)
+
+
+def _check(result, direct):
+    mem, info = result
+    dmem, dinfo = direct
+    np.testing.assert_array_equal(mem, dmem)
+    for k in STAT_KEYS:
+        assert info[k] == dinfo[k], k
+
+
+# -- bit-exactness through the sharded scheduler ----------------------------
+
+@pytest.mark.parametrize("name", sorted(SMALL))
+def test_sharded_scheduler_bit_exact(name):
+    """A mesh-placed scheduler returns the same bits, cycles, and stats as
+    direct ``run_kernel`` on every bench — cohort and vmap-batch chunks,
+    monolithic flush and budgeted drain. At one device this is the
+    graceful-fallback path; under the 8-device CI leg it runs real
+    ``shard_map`` dispatches."""
+    b = SMALL[name]()
+    progA = b.gpu_prog
+    progB = np.vstack([progA, np.zeros((1, progA.shape[1]), np.int32)])
+    mems = [b.gpu_mem] + [_variant_mem(b, s) for s in range(1, 5)]
+    # 0..3 = A over four mems (cohort), 4 = B (batched with nothing: single)
+    launches = [(progA, m) for m in mems[:4]] + [(progB, mems[4])]
+    direct = [run_kernel(p, m, b.gpu_items, CFG) for p, m in launches]
+
+    sched = Scheduler(CFG, max_batch=4, mesh=make_launch_mesh())
+    assert sched.executor.shards == jax.device_count()
+    assert sched.plan_batch == 4 * jax.device_count()
+    for p, m in launches:
+        sched.submit(p, m, b.gpu_items)
+    got = {r.info["ticket"]: r for r in sched.flush()}
+    assert sorted(got) == list(range(len(launches)))
+    for t, d in enumerate(direct):
+        _check(got[t], d)
+
+    # budgeted drain through the same mesh placement
+    sched2 = Scheduler(CFG, max_batch=2, mesh=make_launch_mesh())
+    for p, m in launches:
+        sched2.submit(p, m, b.gpu_items)
+    out = []
+    while len(sched2) or sched2.inflight_chunks:
+        out += sched2.drain(budget=2)
+    assert not sched2.quarantined
+    got2 = {r.info["ticket"]: r for r in out}
+    for t, d in enumerate(direct):
+        _check(got2[t], d)
+
+
+def test_sharded_matches_unsharded_scheduler():
+    """Sharded and plain schedulers serve an identical submission stream
+    to identical per-ticket bits (placement moves arrays, never the
+    traced computation)."""
+    b = SMALL["vec_mul"]()
+    mems = [b.gpu_mem] + [_variant_mem(b, s) for s in range(1, 7)]
+    plain = Scheduler(CFG, max_batch=4)
+    shard = Scheduler(CFG, max_batch=4, mesh=make_launch_mesh())
+    for m in mems:
+        plain.submit(b.gpu_prog, m, b.gpu_items)
+        shard.submit(b.gpu_prog, m, b.gpu_items)
+    want = {r.info["ticket"]: r for r in plain.flush()}
+    got = {r.info["ticket"]: r for r in shard.flush()}
+    assert sorted(want) == sorted(got)
+    for t in want:
+        _check(got[t], want[t])
+
+
+def test_scheduler_rejects_executor_plus_placement():
+    with pytest.raises(ValueError):
+        Scheduler(CFG, executor=Scheduler(CFG).executor,
+                  mesh=make_launch_mesh())
+
+
+# -- cohort bucketing -------------------------------------------------------
+
+def test_cohort_rows_pow2_buckets():
+    """Bucketed cohort sizes: >= B, a multiple of shards, power-of-two per
+    shard, and monotone in B — O(log B) distinct envelopes under open-loop
+    traffic."""
+    for shards in (1, 2, 8):
+        prev = 0
+        for B in range(1, 70):
+            rows = cohort_rows(B, shards)
+            per = rows // shards
+            assert rows >= B and rows % shards == 0
+            assert per & (per - 1) == 0          # power of two
+            assert rows >= prev
+            prev = rows
+    assert cohort_rows(1) == 1
+    assert cohort_rows(5) == 8
+    assert cohort_rows(9, 8) == 16
+    assert cohort_rows(17, 8) == 32
+    # at most log2 buckets cover any range of cohort sizes
+    assert len({cohort_rows(B, 8) for B in range(1, 257)}) <= 7
+
+
+def test_launch_shards_matches_device_count():
+    assert launch_shards(None) == 1
+    assert launch_shards(make_launch_mesh()) == jax.device_count()
+    assert launch_shards(make_launch_mesh(1)) == 1
+
+
+# -- open-loop load generator -----------------------------------------------
+
+def test_loadgen_deterministic_per_seed():
+    a = poisson_arrivals(100.0, 64, seed=7)
+    b = poisson_arrivals(100.0, 64, seed=7)
+    np.testing.assert_array_equal(a, b)
+    c = poisson_arrivals(100.0, 64, seed=8)
+    assert not np.array_equal(a, c)
+    assert a.shape == (64,) and np.all(np.diff(a) > 0)
+    # mean rate lands near the requested one
+    assert 50.0 < 64 / a[-1] < 200.0
+
+    x = bursty_arrivals(4, 8, 0.01, seed=3)
+    np.testing.assert_array_equal(x, bursty_arrivals(4, 8, 0.01, seed=3))
+    assert x.shape == (32,) and np.all(np.diff(x) >= 0)
+    # each burst is simultaneous: only n_bursts distinct times
+    assert len(np.unique(x)) == 4
+
+    with pytest.raises(ValueError):
+        poisson_arrivals(0.0, 4)
+    with pytest.raises(ValueError):
+        bursty_arrivals(2, 2, 0.0)
+
+
+def test_replay_scheduler_open_loop():
+    """Replaying a Poisson trace against a sharded scheduler serves every
+    arrival with positive latency, and the report carries the percentile
+    fields ``BENCH_serve.json`` (schema ggpu-serve/3) records."""
+    b = SMALL["copy"]()
+    mems = [_variant_mem(b, s) for s in range(8)]
+    sched = Scheduler(CFG, max_batch=4, mesh=make_launch_mesh())
+    arrivals = poisson_arrivals(2000.0, 8, seed=11)
+    res = replay(sched, arrivals,
+                 lambda i: Request(b.gpu_prog, mems[i], b.gpu_items))
+    assert res.served == 8 and res.quarantined == 0
+    lat = res.latencies
+    assert lat.shape == (8,) and not np.isnan(lat).any()
+    assert np.all(lat > 0)
+    rep = res.report()
+    assert 0 < rep["p50_ms"] <= rep["p99_ms"]
+    assert rep["rate_per_s"] > 0
+
+
+# -- fleet placement and report ---------------------------------------------
+
+def test_mesh_slices_partition():
+    """Contiguous proportional slices: cover all devices exactly once, in
+    order, with empty slices only when the fleet outnumbers the mesh."""
+    mesh = make_launch_mesh()
+    devs = list(np.ravel(mesh.devices))
+    for n in (1, 2, 3, len(devs), len(devs) + 2):
+        slices = _mesh_slices(mesh, n)
+        assert len(slices) == n
+        flat = [d for s in slices for d in s]
+        assert flat == devs                      # partition, order kept
+        sizes = [len(s) for s in slices]
+        nonzero = [s for s in sizes if s]
+        assert max(nonzero) - min(nonzero) <= 1  # proportional
+        assert sizes == sorted(sizes, reverse=True)   # largest first
+
+
+def test_fleet_report_utilization_and_queue_depth():
+    b = SMALL["fir"]()
+    fast = GGPUConfig(n_cus=1, freq_mhz=800.0)
+    wide = GGPUConfig(n_cus=8, freq_mhz=500.0)
+    fleet = Fleet([("fast", fast), ("wide", wide)], max_batch=4,
+                  mesh=make_launch_mesh())
+    rep0 = fleet.report()
+    assert set(rep0["utilization"]) == {"fast", "wide"}
+    assert all(v == 0.0 for v in rep0["utilization"].values())
+    assert all(v == 0 for v in rep0["queue_depth"].values())
+    assert sum(rep0["shards"].values()) >= 2 or jax.device_count() == 1
+
+    for s in range(6):
+        fleet.submit(b.gpu_prog, _variant_mem(b, s), b.gpu_items)
+    rep1 = fleet.report()
+    assert sum(rep1["queue_depth"].values()) == 6
+    out = fleet.drain()
+    assert len(out) == 6 and not fleet.quarantined
+    rep2 = fleet.report()
+    assert all(v == 0 for v in rep2["queue_depth"].values())
+    util = rep2["utilization"]
+    assert max(util.values()) == 1.0             # critical-path device
+    assert all(0.0 <= v <= 1.0 for v in util.values())
+    assert sum(rep2["placement"].values()) == 6
+    # routed results are bit-exact vs direct execution on their device
+    cfg_of = {"fast": fast, "wide": wide}
+    for r in out:
+        i = r.info["ticket"]
+        d = run_kernel(b.gpu_prog, _variant_mem(b, i), b.gpu_items,
+                       cfg_of[r.info["device"]])
+        np.testing.assert_array_equal(r.mem, d[0])
+
+
+def test_replay_drives_fleet():
+    b = SMALL["copy"]()
+    mems = [_variant_mem(b, s) for s in range(6)]
+    fleet = Fleet([("a", CFG), ("b", GGPUConfig(n_cus=4))], max_batch=4,
+                  mesh=make_launch_mesh())
+    res = replay(fleet, bursty_arrivals(2, 3, 0.002, seed=5),
+                 lambda i: Request(b.gpu_prog, mems[i], b.gpu_items))
+    assert res.served == 6 and res.quarantined == 0
+    assert res.p99_ms >= res.p50_ms > 0
+
+
+# -- real 8-way sharding in a subprocess ------------------------------------
+
+SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import jax
+    import numpy as np
+    assert jax.device_count() == 8, jax.device_count()
+    from repro.ggpu import programs
+    from repro.ggpu.engine import GGPUConfig, run_kernel
+    from repro.launch.mesh import make_launch_mesh
+    from repro.serve import Scheduler
+    cfg = GGPUConfig(n_cus=2)
+    b = programs._vec_mul(16, 64)
+    rng = np.random.default_rng(0)
+    mems = [rng.integers(-20, 20, b.gpu_mem.shape[0]).astype(np.int32)
+            for _ in range(16)]
+    sched = Scheduler(cfg, max_batch=2, mesh=make_launch_mesh())
+    assert sched.executor.shards == 8, sched.executor.shards
+    assert sched.plan_batch == 16
+    for m in mems:
+        sched.submit(b.gpu_prog, m, b.gpu_items)
+    got = {r.info["ticket"]: r for r in sched.flush()}
+    assert sched.executor.stats.dispatches == 1   # one 16-wide dispatch
+    for t, m in enumerate(mems):
+        dmem, dinfo = run_kernel(b.gpu_prog, m, b.gpu_items, cfg)
+        np.testing.assert_array_equal(got[t].mem, dmem)
+        assert got[t].info["cycles"] == dinfo["cycles"]
+    print("OK8")
+""")
+
+
+def test_eight_device_sharding_subprocess():
+    """Force 8 host devices in a clean interpreter and assert a 16-launch
+    stream resolves bit-exactly through ONE 8-way sharded dispatch."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", SUBPROC], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr
+    assert "OK8" in proc.stdout
