@@ -7,7 +7,10 @@ CI runs the ``dse-smoke`` / ``serve-smoke`` jobs, then::
 
 and fails the build on any violation, so a perf regression breaks CI
 instead of uploading quietly. The artifact kind is auto-detected from the
-``schema`` field (``ggpu-dse/1`` / ``ggpu-serve/3``).
+``schema`` field (``ggpu-dse/1`` / ``ggpu-serve/3`` / ``ggpu-compiler/2``
+— the compiler gate also re-enforces the absolute autotune invariants on
+the fresh artifact: tuned never worse than the default schedule anywhere,
+strictly better on >= 1 bench, all candidates oracle-verified).
 
 Tolerance bands per metric class:
 
@@ -40,6 +43,7 @@ from typing import List, Optional
 
 DSE_SCHEMA = "ggpu-dse/1"
 SERVE_SCHEMA = "ggpu-serve/3"
+COMPILER_SCHEMA = "ggpu-compiler/2"
 
 
 def _band(violations: List[str], name: str, fresh, base, tol: float):
@@ -154,6 +158,53 @@ def check_serve(fresh: dict, base: dict, tol: float,
     return v
 
 
+def check_compiler(fresh: dict, base: dict, tol: float,
+                   host_tol: float) -> List[str]:
+    from benchmarks.compiler_bench import autotune_invariants
+
+    v: List[str] = []
+    _exact(v, "schema", fresh.get("schema"), base.get("schema"))
+    # suite parity: compiled cycle counts are deterministic goldens
+    fp, bp = fresh.get("suite_parity", {}), base.get("suite_parity", {})
+    _exact(v, "suite bench set", sorted(fp), sorted(bp))
+    for name in sorted(set(fp) & set(bp)):
+        for key in ("cycles_hand", "cycles_dsl", "bit_exact", "prog_len"):
+            _exact(v, f"suite_parity.{name}.{key}", fp[name].get(key),
+                   bp[name].get(key))
+    # autotune: absolute invariants on the FRESH artifact (tuned never
+    # worse than default, strictly better somewhere, all verified) ...
+    ft = fresh.get("autotune", {})
+    v += autotune_invariants(ft)
+    # ... plus exact chosen-schedule/cycle stability vs the baseline: a
+    # tuned-cycle regression or a different deterministic pick is a real
+    # compiler behavior change, not noise
+    bt = base.get("autotune", {})
+    fb, bb = ft.get("benches", {}), bt.get("benches", {})
+    _exact(v, "autotune bench set", sorted(fb), sorted(bb))
+    for name in sorted(set(fb) & set(bb)):
+        for key in ("best_schedule", "default_cycles", "tuned_cycles",
+                    "n_candidates"):
+            _exact(v, f"autotune.{name}.{key}", fb[name].get(key),
+                   bb[name].get(key))
+    # codesign: the joint frontier is a deterministic function of the code
+    fc, bc = fresh.get("codesign", {}), base.get("codesign", {})
+    if not fc.get("frontier"):
+        v.append("codesign frontier is empty")
+    _exact(v, "codesign.schedules", fc.get("schedules"),
+           bc.get("schedules"))
+    _exact(v, "codesign.n_points", fc.get("n_points"), bc.get("n_points"))
+    _exact(v, "codesign.frontier",
+           [(r.get("label"), r.get("schedule"))
+            for r in fc.get("frontier", [])],
+           [(r.get("label"), r.get("schedule"))
+            for r in bc.get("frontier", [])])
+    # the nested generated-workload DSE artifact is a standard ggpu-dse/1
+    v += [f"dse.{x}" for x in check_dse(fresh.get("dse", {}),
+                                        base.get("dse", {}), tol,
+                                        host_tol)]
+    return v
+
+
 def check_artifacts(fresh: dict, base: dict, tol: float = 0.25,
                     host_tol: float = 3.0) -> List[str]:
     """All violations of ``fresh`` against ``base`` (empty = gate passes).
@@ -163,6 +214,8 @@ def check_artifacts(fresh: dict, base: dict, tol: float = 0.25,
         return check_dse(fresh, base, tol, host_tol)
     if schema == SERVE_SCHEMA:
         return check_serve(fresh, base, tol, host_tol)
+    if schema == COMPILER_SCHEMA:
+        return check_compiler(fresh, base, tol, host_tol)
     return [f"unknown baseline schema {schema!r}"]
 
 

@@ -1,6 +1,7 @@
 """Compiler sweep (``python -m benchmarks.run --compiler``).
 
-Exercises the tensor-expression DSL end to end:
+Exercises the tensor-expression DSL end to end and writes the
+``ggpu-compiler/2`` artifact:
 
   * **suite parity** — compiles the eight bench kernels, runs each against
     its hand-written twin on one engine config, and reports the cycle
@@ -8,14 +9,26 @@ Exercises the tensor-expression DSL end to end:
     ``parallel_sel``, see ``repro.compiler.suite``); every compiled
     result is differentially checked against both the hand-written NumPy
     reference and the compiler's own oracle.
+  * **autotune** — ``repro.compiler.autotune`` schedule search per bench
+    (fast: 2 benches x ``SMOKE_SPACE``; full: all 8 x ``DEFAULT_SPACE``),
+    reporting tuned-vs-default and tuned-vs-hand cycle ratios. Absolute
+    invariants (also re-enforced by ``check_bench`` on the fresh
+    artifact): the tuned schedule is **never worse than the default on
+    any bench and strictly better on at least one**, and every candidate
+    was bit-exact vs the IR oracle.
+  * **codesign** — ``(DesignPoint, Schedule)`` pairs ranked on one joint
+    Pareto frontier (``autotune.codesign``); the frontier must be
+    non-empty.
   * **generated-workload DSE** — a ``repro.dse.search`` Pareto sweep whose
     evaluator runs *compiled* workloads (a suite sample plus a
-    user-style kernel that exists in no hand-written form), writing the
-    standard ``ggpu-dse/1`` artifact to ``BENCH_compiler.json`` (path
-    overridable via ``GGPU_COMPILER_OUT``).
+    user-style kernel that exists in no hand-written form), nested under
+    ``"dse"`` as a standard ``ggpu-dse/1`` artifact.
 
-``--fast`` shrinks sizes and the spec grid; the nightly ``compiler-sweep``
-workflow runs the full version and uploads the artifact.
+``--fast`` shrinks sizes, the spec grid, and the schedule space; the
+PR-blocking ``compiler-smoke`` job runs it and gates the artifact against
+``benchmarks/baselines/BENCH_compiler.json``, while the nightly
+``compiler-sweep`` workflow runs the full version. Both upload the
+artifact (path overridable via ``GGPU_COMPILER_OUT``).
 
 Returns (artifact dict, problems list) — ``benchmarks.run`` exits
 non-zero when any invariant fails.
@@ -28,6 +41,8 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
+SCHEMA = "ggpu-compiler/2"
+
 #: reduced bench sizes for the fast (CI-smoke-adjacent) variant
 FAST_SIZES = {
     "copy": (64, 512), "vec_mul": (64, 512), "div_int": (64, 512),
@@ -39,6 +54,13 @@ FAST_SIZES = {
 FULL_SIZES = {
     "xcorr": (64, 1024), "parallel_sel": (64, 1024),
 }
+
+#: benches in the fast autotune/codesign sample: elementwise kernels where
+#: coarsening provably moves cycles, so the strictly-better invariant has
+#: a real witness in the smoke space
+FAST_TUNE_BENCHES = ("copy", "vec_mul")
+ALL_BENCHES = ("copy", "vec_mul", "div_int", "reduction", "fir",
+               "mat_mul", "xcorr", "parallel_sel")
 
 
 def _user_kernel(n: int, seg: int):
@@ -89,6 +111,126 @@ def bench_suite_parity(emit, fast: bool):
     return rows, problems, compiled
 
 
+def autotune_invariants(section: dict) -> List[str]:
+    """Absolute autotune health invariants, shared between the benchmark
+    harness's own exit-code check and ``check_bench`` on a fresh
+    artifact: tuned never worse than default on ANY bench, strictly
+    better on >= 1, every candidate verified bit-exact."""
+    problems: List[str] = []
+    benches = section.get("benches", {})
+    if not benches:
+        return ["autotune section has no benches"]
+    strict = 0
+    for name, row in sorted(benches.items()):
+        tuned, default = row.get("tuned_cycles"), row.get("default_cycles")
+        if tuned is None or default is None:
+            problems.append(f"autotune {name}: missing cycle fields")
+            continue
+        if tuned > default:
+            problems.append(
+                f"autotune {name}: tuned {tuned} > default {default}")
+        elif tuned < default:
+            strict += 1
+        if not row.get("verified", False):
+            problems.append(f"autotune {name}: candidates not verified")
+    if strict == 0:
+        problems.append(
+            "autotune: no bench strictly faster than the default schedule")
+    return problems
+
+
+def bench_autotune(emit, fast: bool) -> Tuple[dict, List[str]]:
+    """Schedule search per bench through ``repro.compiler.autotune``;
+    returns (section, problems)."""
+    from repro.compiler.autotune import (DEFAULT_SPACE, SMOKE_SPACE,
+                                         autotune_suite)
+    from repro.ggpu.engine import GGPUConfig
+
+    cfg = GGPUConfig(n_cus=2)
+    if fast:
+        names, space = FAST_TUNE_BENCHES, SMOKE_SPACE
+        sizes = dict(FAST_SIZES)
+    else:
+        names, space = ALL_BENCHES, DEFAULT_SPACE
+        sizes = dict(FULL_SIZES)
+    t0 = time.perf_counter()
+    results = autotune_suite(names, cfg, sizes=sizes, space=space)
+    wall = time.perf_counter() - t0
+    benches = {}
+    from repro.compiler.suite import hand_benches
+    from repro.ggpu.engine import run_kernel
+    hands = hand_benches(sizes)
+    for name, r in results.items():
+        hand = hands[name]
+        _, ih = run_kernel(hand.gpu_prog, hand.gpu_mem, hand.gpu_items,
+                           cfg)
+        row = r.report()
+        row["verified"] = all(c.verified for c in r.candidates)
+        row["cycles_hand"] = int(ih["cycles"])
+        row["tuned_vs_hand"] = round(r.best_cycles / ih["cycles"], 4)
+        del row["name"]
+        benches[name] = row
+        emit(f"compiler/autotune/{name}", 0.0,
+             f"best={r.best_schedule.label()} tuned={r.best_cycles} "
+             f"default={r.default_cycles} hand={ih['cycles']} "
+             f"speedup={r.speedup:.3f}")
+    section = {
+        "config": "cu2-shared",
+        "space": {
+            "coarsen": sorted(space.coarsen),
+            "hoist": sorted(space.hoist),
+            "branchy": sorted(space.branchy),
+            "peel": sorted(space.peel),
+        },
+        "benches": benches,
+        "wall_s": round(wall, 3),
+    }
+    return section, autotune_invariants(section)
+
+
+def bench_codesign(emit, fast: bool) -> Tuple[dict, List[str]]:
+    """(DesignPoint, Schedule) co-design sweep; returns (section,
+    problems)."""
+    from repro.compiler.autotune import SMOKE_SPACE, ScheduleSpace, codesign
+    from repro.compiler.suite import def_args, hand_benches, kernel_def
+    from repro.dse.search import enumerate_specs
+
+    if fast:
+        space = SMOKE_SPACE
+        specs = enumerate_specs(cus=(1, 2), freq_targets=(500.0, 667.0))
+        sizes = dict(FAST_SIZES)
+    else:
+        space = ScheduleSpace(coarsen=(1, 2, 4), hoist=(True,),
+                              branchy=(True, False), peel=(True,))
+        specs = enumerate_specs(cus=(1, 2, 4),
+                                freq_targets=(500.0, 667.0))
+        sizes = dict(FULL_SIZES)
+    hands = hand_benches(sizes)
+    defs = {n: kernel_def(n, *def_args(n, hands[n]))
+            for n in FAST_TUNE_BENCHES}
+    t0 = time.perf_counter()
+    res = codesign(defs, specs, space=space)
+    wall = time.perf_counter() - t0
+    problems: List[str] = []
+    if not res.frontier:
+        problems.append("codesign frontier is empty")
+    frontier_rows = [{"label": jp.label(), "schedule": jp.variant,
+                      "time_us": round(jp.point.time_us, 3),
+                      "area_mm2": round(jp.point.area_mm2, 2)}
+                     for jp in res.frontier]
+    for row in frontier_rows:
+        emit(f"compiler/codesign/{row['label']}", row["time_us"],
+             f"area={row['area_mm2']:.2f} schedule={row['schedule']}")
+    section = {
+        "workloads": sorted(defs),
+        "schedules": sorted(res.results),
+        "n_points": sum(len(r.points) for r in res.results.values()),
+        "frontier": sorted(frontier_rows, key=lambda r: r["label"]),
+        "wall_s": round(wall, 3),
+    }
+    return section, problems
+
+
 def bench_compiled_dse(emit, fast: bool,
                        compiled: Dict[str, object]) -> Tuple[dict,
                                                              List[str]]:
@@ -128,14 +270,23 @@ def bench_compiled_dse(emit, fast: bool,
 
 def bench_compiler(emit, fast: bool = False,
                    out: str = None) -> Tuple[dict, List[str]]:
-    """Run both sections and write the ``BENCH_compiler.json`` artifact."""
+    """Run all sections and write the ``BENCH_compiler.json`` artifact."""
     import json
 
     out = out or os.environ.get("GGPU_COMPILER_OUT", "BENCH_compiler.json")
     rows, problems, compiled = bench_suite_parity(emit, fast)
-    art, p2 = bench_compiled_dse(emit, fast, compiled)
-    problems += p2
-    art["suite_parity"] = rows
+    tune, p2 = bench_autotune(emit, fast)
+    co, p3 = bench_codesign(emit, fast)
+    dse_art, p4 = bench_compiled_dse(emit, fast, compiled)
+    problems += p2 + p3 + p4
+    art = {
+        "schema": SCHEMA,
+        "fast": bool(fast),
+        "suite_parity": rows,
+        "autotune": tune,
+        "codesign": co,
+        "dse": dse_art,
+    }
     with open(out, "w") as f:
         json.dump(art, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -4,22 +4,31 @@ The workload-side generator that pairs with the hardware-side GPUPlanner
 (the paper's "fully-automated" loop closed on both ends): a small traced
 tensor DSL (``frontend``) over a per-item scalar expression IR (``ir``),
 folded/strength-reduced/CSE'd (``opt``) and lowered to both the SIMT and
-sequential-scalar ISA programs (``lower``). Every compiled kernel is
-differentially verifiable against a NumPy oracle with exact engine ALU
-semantics, and ``suite`` re-derives all eight hand-written benches from
-one-line DSL definitions so ``dse.search``, ``serve.Fleet``, and the
-benchmarks can sweep generated workloads instead of a fixed list
-(DESIGN.md §Compiler).
+sequential-scalar ISA programs (``lower``) under a parameterized
+``Schedule`` (coarsening, hoisting, branch idiom, const peeling). Every
+compiled kernel is differentially verifiable against a NumPy oracle with
+exact engine ALU semantics, ``suite`` re-derives all eight hand-written
+benches from one-line DSL definitions, and ``autotune`` searches the
+schedule space per kernel — or jointly with the hardware design space
+(``codesign``) — costed in true cycles through ``dse.Evaluator``
+(DESIGN.md §Compiler, §Autotuner).
 """
+from repro.compiler.autotune import (DEFAULT_SPACE, SMOKE_SPACE,
+                                     AutotuneResult, CodesignResult,
+                                     ScheduleSpace, autotune,
+                                     autotune_suite, codesign)
 from repro.compiler.frontend import (ScatterTensor, Tensor, compile_kernel,
                                      dsl)
 from repro.compiler.ir import CompileError
-from repro.compiler.lower import CompiledKernel
-from repro.compiler.suite import (compile_pair, dsl_benches, dsl_kernels,
-                                  hand_benches)
+from repro.compiler.lower import DEFAULT_SCHEDULE, CompiledKernel, Schedule
+from repro.compiler.suite import (compile_pair, def_args, dsl_benches,
+                                  dsl_kernels, hand_benches, kernel_def)
 
 __all__ = [
     "compile_kernel", "dsl", "Tensor", "ScatterTensor",
     "CompiledKernel", "CompileError", "dsl_benches", "dsl_kernels",
-    "hand_benches", "compile_pair",
+    "hand_benches", "compile_pair", "kernel_def", "def_args",
+    "Schedule", "DEFAULT_SCHEDULE", "ScheduleSpace", "DEFAULT_SPACE",
+    "SMOKE_SPACE", "autotune", "autotune_suite", "AutotuneResult",
+    "codesign", "CodesignResult",
 ]

@@ -37,7 +37,7 @@ from repro.compiler import opt
 from repro.compiler.ir import (CompileError, Const, Expr, Item, Kernel,
                                Load)
 from repro.compiler.ir import wrap32 as ir_wrap32
-from repro.compiler.lower import CompiledKernel, lower_kernel
+from repro.compiler.lower import (CompiledKernel, Schedule, lower_kernel)
 
 Shape = Tuple[int, ...]
 
@@ -313,12 +313,25 @@ class dsl:
 def compile_kernel(fn: Callable, shapes: Union[Dict[str, object],
                                                Sequence[object]],
                    name: Optional[str] = None,
-                   coarsen: int = 1) -> CompiledKernel:
+                   coarsen: int = 1,
+                   schedule: Optional[Schedule] = None) -> CompiledKernel:
     """Trace ``fn`` over symbolic tensors and lower to G-GPU programs.
 
     ``shapes`` maps the callable's parameter names to int / (rows, cols)
     shapes (a sequence is matched positionally). ``coarsen`` folds that
-    many consecutive output elements into each work item."""
+    many consecutive output elements into each work item.
+
+    ``schedule`` selects the full lowering schedule (coarsening plus the
+    hoist / branchy / peel codegen knobs — see ``repro.compiler.lower.
+    Schedule`` and the autotuner in ``repro.compiler.autotune``). When
+    given, its ``coarsen`` field is authoritative and the legacy
+    ``coarsen`` argument must agree or stay at its default."""
+    if schedule is None:
+        schedule = Schedule(coarsen=coarsen)
+    elif coarsen != 1 and coarsen != schedule.coarsen:
+        raise CompileError(
+            f"coarsen={coarsen} conflicts with schedule {schedule.label()}")
+    coarsen = schedule.coarsen
     params = list(inspect.signature(fn).parameters)
     if isinstance(shapes, dict):
         missing = [p for p in params if p not in shapes]
@@ -362,4 +375,4 @@ def compile_kernel(fn: Callable, shapes: Union[Dict[str, object],
             "<lambda>", "kernel"),
         arrays=arrays, out_len=out.out_len,
         n_items=out.out_len // coarsen, stores=stores)
-    return lower_kernel(kernel)
+    return lower_kernel(kernel, schedule)

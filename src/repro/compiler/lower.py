@@ -35,6 +35,13 @@ cycle counts):
 
 Address expressions peel their constant tail into the load/store
 immediate field, so ``a[i]`` is one ``LW`` with the array base in ``imm``.
+
+Every choice above is a **schedule knob** (``Schedule``): the default
+schedule reproduces the hand-written idiom exactly (and therefore the
+golden cycle counts), while the autotuner (``repro.compiler.autotune``)
+sweeps the alternatives — output coarsening, hoisting off, the branch-free
+select lowering of guards, address-peeling off — and keeps whichever
+lowering is fastest in true cycles on the target design point.
 """
 from __future__ import annotations
 
@@ -64,13 +71,63 @@ _INV_BRANCH = {"lt": "bge", "ge": "blt", "eq": "bne", "ne": "beq"}
 _COND_UPDATE_OPS = ("add", "sub", "or", "xor")
 
 
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """One point in the lowering-choice space the autotuner searches.
+
+    ``coarsen`` tiles that many consecutive output elements onto one work
+    item (must divide the kernel's output length). ``hoist`` enables
+    loop-invariant hoisting. ``branchy`` selects the Guard lowering:
+    ``True`` emits the hand-written branch idioms (branch-over-term,
+    conditional update), ``False`` rewrites every ``Guard(c, e)`` into the
+    branch-free ``cond_val(c) * e`` select before codegen — more ALU work,
+    no divergence. ``peel`` enables peeling constant address tails into
+    the LW/SW immediate field; off, addresses materialize through the
+    register file (the register-pressure end of that trade-off).
+
+    ``Schedule()`` is the default lowering — bit- and cycle-identical to
+    the pre-schedule compiler on every kernel.
+    """
+    coarsen: int = 1
+    hoist: bool = True
+    branchy: bool = True
+    peel: bool = True
+
+    def __post_init__(self):
+        if self.coarsen < 1:
+            raise CompileError(f"coarsen={self.coarsen} must be >= 1")
+
+    def label(self) -> str:
+        """Compact stable label, e.g. ``c2+nohoist+select``; ``c1`` is
+        the default schedule."""
+        parts = [f"c{self.coarsen}"]
+        if not self.hoist:
+            parts.append("nohoist")
+        if not self.branchy:
+            parts.append("select")
+        if not self.peel:
+            parts.append("nopeel")
+        return "+".join(parts)
+
+    def sort_key(self) -> tuple:
+        """Deterministic tie-break order: the default schedule first,
+        then least-surprising (closest to default) lowerings."""
+        return (self.coarsen != 1, self.coarsen, not self.branchy,
+                not self.hoist, not self.peel)
+
+
+DEFAULT_SCHEDULE = Schedule()
+
+
 class _Codegen:
     """One emission pass over a kernel body (SIMT or scalar variant)."""
 
     def __init__(self, asm: Assembler, roots: Sequence[Expr],
-                 layout: Dict[str, int], item_reg: int):
+                 layout: Dict[str, int], item_reg: int,
+                 schedule: Schedule = DEFAULT_SCHEDULE):
         self.asm = asm
         self.layout = layout
+        self.schedule = schedule
         self.uses = opt.use_counts(roots)
         self.free = sorted(set(range(2, 32)) - {item_reg})
         self.cache: Dict[Expr, int] = {Item(): item_reg}
@@ -273,7 +330,11 @@ class _Codegen:
         """Materialize compound subexpressions of a loop body that do not
         read the loop counter before the loop opens. A node is hoistable
         when it avoids ``newvar`` and every other variable it reads is
-        already live (an enclosing loop's counter or the item index)."""
+        already live (an enclosing loop's counter or the item index).
+        Disabled schedules recompute invariants inside the loop instead
+        (fewer registers live across the loop)."""
+        if not self.schedule.hoist:
+            return
         if isinstance(e, (Const, Item, LoopVar)):
             return
         vs = self._vars_of(e)
@@ -326,6 +387,10 @@ class _Codegen:
         expression, peeling the constant tail into the immediate."""
         if e in self.cache:
             return self.cache[e], 0, e
+        if not self.schedule.peel:
+            # schedule knob: address constants materialize through the
+            # register file (folded by the ADDI immediate forms instead)
+            return self.emit(e), 0, e
         imm = 0
         peeled = False
         while isinstance(e, Bin) and e.op == "add" \
@@ -353,28 +418,44 @@ class _Codegen:
 # program builders
 # ---------------------------------------------------------------------------
 
-def build_simt(kernel: Kernel) -> np.ndarray:
+def _scheduled_stores(kernel: Kernel,
+                      schedule: Schedule) -> List[Tuple[Expr, Expr]]:
+    """The store list the codegen lowers: the kernel's own under the
+    branchy (default) schedule, the branch-free select rewrite otherwise.
+    The kernel's IR — and therefore the oracle — is never mutated."""
+    if schedule.branchy:
+        return kernel.stores
+    memo: Dict[Expr, Expr] = {}
+    return [(opt.to_select(a, memo), opt.to_select(v, memo))
+            for a, v in kernel.stores]
+
+
+def build_simt(kernel: Kernel,
+               schedule: Schedule = DEFAULT_SCHEDULE) -> np.ndarray:
     """The G-GPU program: TID -> item, body, stores, HALT."""
     asm = Assembler()
     layout = kernel.layout()
-    roots = [r for a, v in kernel.stores
+    stores = _scheduled_stores(kernel, schedule)
+    roots = [r for a, v in stores
              for r in (v, opt.add(a, Const(layout["__out__"])))]
     asm.tid(1)
-    gen = _Codegen(asm, roots, layout, item_reg=1)
-    for addr, value in kernel.stores:
+    gen = _Codegen(asm, roots, layout, item_reg=1, schedule=schedule)
+    for addr, value in stores:
         gen.store(addr, value, layout["__out__"])
     asm.halt()
     return asm.assemble()
 
 
-def build_scalar(kernel: Kernel) -> np.ndarray:
+def build_scalar(kernel: Kernel,
+                 schedule: Schedule = DEFAULT_SCHEDULE) -> np.ndarray:
     """The sequential baseline: the same body in an outer item loop."""
     asm = Assembler()
     layout = kernel.layout()
-    roots = [r for a, v in kernel.stores
+    stores = _scheduled_stores(kernel, schedule)
+    roots = [r for a, v in stores
              for r in (v, opt.add(a, Const(layout["__out__"])))]
     asm.li(1, 0)
-    gen = _Codegen(asm, roots, layout, item_reg=1)
+    gen = _Codegen(asm, roots, layout, item_reg=1, schedule=schedule)
     rlim = gen._alloc(None)
     asm.li(rlim, kernel.n_items)
     # hoist item-invariant work out of the outer loop
@@ -384,7 +465,7 @@ def build_scalar(kernel: Kernel) -> np.ndarray:
     asm.label(top)
     asm.bge(1, rlim, end)
     gen._open_scope()
-    for addr, value in kernel.stores:
+    for addr, value in stores:
         gen.store(addr, value, layout["__out__"])
     gen._close_scope()
     asm.addi(1, 1, 1)
@@ -407,6 +488,7 @@ class CompiledKernel:
     prog: np.ndarray                 # SIMT program (one item per output)
     scalar_prog: np.ndarray          # sequential outer-loop program
     n_items: int
+    schedule: Schedule = DEFAULT_SCHEDULE
 
     @property
     def layout(self) -> Dict[str, int]:
@@ -527,6 +609,8 @@ class CompiledKernel:
                      self.n_items, self.n_items)
 
 
-def lower_kernel(kernel: Kernel) -> CompiledKernel:
-    return CompiledKernel(kernel.name, kernel, build_simt(kernel),
-                          build_scalar(kernel), kernel.n_items)
+def lower_kernel(kernel: Kernel,
+                 schedule: Schedule = DEFAULT_SCHEDULE) -> CompiledKernel:
+    return CompiledKernel(kernel.name, kernel, build_simt(kernel, schedule),
+                          build_scalar(kernel, schedule), kernel.n_items,
+                          schedule)

@@ -162,6 +162,51 @@ def guard(c: Cond, body) -> Expr:
     return Guard(c, body)
 
 
+def cond_val(c: Cond) -> Expr:
+    """The 0/1 *value* of a condition, on the ALU datapath instead of the
+    branch unit — the building block of branch-free (select) lowering."""
+    if c.op == "lt":
+        return lt_val(c.a, c.b)
+    if c.op == "ge":
+        return binop("xor", lt_val(c.a, c.b), Const(1))
+    if c.op == "eq":
+        return eq_val(c.a, c.b)
+    if c.op == "ne":
+        return ne_val(c.a, c.b)
+    raise CompileError(f"unknown condition {c.op!r}")
+
+
+def to_select(e: Expr, memo: Dict[Expr, Expr] = None) -> Expr:
+    """Rewrite every ``Guard`` in ``e`` into the branch-free select form
+    ``cond_val(c) * body``.  Bit-exact: the oracle evaluates ``Guard`` as a
+    masked select whose body always runs (``ir.eval_expr``), and the engine
+    ALU has no traps, so multiplying by the 0/1 condition value is the same
+    function.  Shared subtrees stay shared through ``memo`` (CSE-preserving),
+    and callers may pass one memo across several roots."""
+    if memo is None:
+        memo = {}
+    if e in memo:
+        return memo[e]
+    if isinstance(e, Guard):
+        c = cond(e.cond.op, to_select(e.cond.a, memo), to_select(e.cond.b, memo))
+        out = mul(cond_val(c), to_select(e.body, memo))
+    elif isinstance(e, Bin):
+        out = binop(e.op, to_select(e.a, memo), to_select(e.b, memo))
+    elif isinstance(e, Reduce):
+        from repro.compiler.ir import Reduce as _R
+        body = to_select(e.body, memo)
+        out = e if body is e.body else _R(e.var, e.count, body)
+    else:
+        from repro.compiler.ir import Load
+        if isinstance(e, Load):
+            idx = to_select(e.idx, memo)
+            out = e if idx is e.idx else Load(e.array, idx)
+        else:
+            out = e                 # Item / Const / LoopVar: leaves
+    memo[e] = out
+    return out
+
+
 def reduce_sum(count: int, body_fn) -> Expr:
     """``sum(body_fn(k) for k in range(count))`` as a ``Reduce`` node;
     ``body_fn`` receives the bound ``LoopVar``."""

@@ -27,54 +27,109 @@ the serving stack.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.compiler.frontend import compile_kernel, dsl
 from repro.compiler.ir import CompileError
-from repro.compiler.lower import CompiledKernel
+from repro.compiler.lower import CompiledKernel, Schedule
 from repro.ggpu import programs
 
-
-def k_copy(n: int) -> CompiledKernel:
-    return compile_kernel(lambda a: a, dict(a=n), name="copy")
+KernelDef = Tuple[Callable, Dict[str, object]]
 
 
-def k_vec_mul(n: int) -> CompiledKernel:
-    return compile_kernel(lambda a, b: a * b, dict(a=n, b=n),
-                          name="vec_mul")
+def d_copy(n: int) -> KernelDef:
+    return (lambda a: a), dict(a=n)
 
 
-def k_mat_mul(d: int) -> CompiledKernel:
-    return compile_kernel(lambda a, b: a @ b,
-                          dict(a=(d, d), b=(d, d)), name="mat_mul")
+def d_vec_mul(n: int) -> KernelDef:
+    return (lambda a, b: a * b), dict(a=n, b=n)
 
 
-def k_fir(n: int, taps: int = 16) -> CompiledKernel:
-    return compile_kernel(lambda x, h: dsl.fir(x, h),
-                          dict(x=n, h=taps), name="fir")
+def d_mat_mul(d: int) -> KernelDef:
+    return (lambda a, b: a @ b), dict(a=(d, d), b=(d, d))
 
 
-def k_div_int(n: int) -> CompiledKernel:
-    return compile_kernel(lambda a, b: a // b, dict(a=n, b=n),
-                          name="div_int")
+def d_fir(n: int, taps: int = 16) -> KernelDef:
+    return (lambda x, h: dsl.fir(x, h)), dict(x=n, h=taps)
 
 
-def k_xcorr(n: int) -> CompiledKernel:
-    return compile_kernel(lambda a, b: dsl.xcorr(a, b), dict(a=n, b=n),
-                          name="xcorr")
+def d_div_int(n: int) -> KernelDef:
+    return (lambda a, b: a // b), dict(a=n, b=n)
 
 
-def k_parallel_sel(n: int) -> CompiledKernel:
-    return compile_kernel(lambda a: dsl.rank_sort(a), dict(a=n),
-                          name="parallel_sel")
+def d_xcorr(n: int) -> KernelDef:
+    return (lambda a, b: dsl.xcorr(a, b)), dict(a=n, b=n)
 
 
-def k_reduction(n: int, seg: int = programs.REDUCTION_SEG
-                ) -> CompiledKernel:
-    return compile_kernel(lambda a, b: (a * b).seg_sum(seg),
-                          dict(a=n, b=n), name="reduction")
+def d_parallel_sel(n: int) -> KernelDef:
+    return (lambda a: dsl.rank_sort(a)), dict(a=n)
+
+
+def d_reduction(n: int, seg: int = programs.REDUCTION_SEG) -> KernelDef:
+    return (lambda a, b: (a * b).seg_sum(seg)), dict(a=n, b=n)
+
+
+#: bench name -> (fn, shapes) definition builder, taking the same size
+#: arguments as the ``k_<name>`` kernel builders below. The autotuner
+#: re-traces these under candidate schedules (`repro.compiler.autotune`).
+_DEFS: Dict[str, Callable[..., KernelDef]] = {
+    "copy": d_copy,
+    "vec_mul": d_vec_mul,
+    "mat_mul": d_mat_mul,
+    "fir": d_fir,
+    "div_int": d_div_int,
+    "xcorr": d_xcorr,
+    "parallel_sel": d_parallel_sel,
+    "reduction": d_reduction,
+}
+
+
+def kernel_def(name: str, *args) -> KernelDef:
+    """The traceable ``(fn, shapes)`` definition of a suite bench — the
+    re-compilable form a schedule search needs."""
+    fn, shapes = _DEFS[name](*args)
+    return fn, shapes
+
+
+def _build(name: str, *args,
+           schedule: Optional[Schedule] = None) -> CompiledKernel:
+    fn, shapes = kernel_def(name, *args)
+    return compile_kernel(fn, shapes, name=name, schedule=schedule)
+
+
+def k_copy(n: int, **kw) -> CompiledKernel:
+    return _build("copy", n, **kw)
+
+
+def k_vec_mul(n: int, **kw) -> CompiledKernel:
+    return _build("vec_mul", n, **kw)
+
+
+def k_mat_mul(d: int, **kw) -> CompiledKernel:
+    return _build("mat_mul", d, **kw)
+
+
+def k_fir(n: int, taps: int = 16, **kw) -> CompiledKernel:
+    return _build("fir", n, taps, **kw)
+
+
+def k_div_int(n: int, **kw) -> CompiledKernel:
+    return _build("div_int", n, **kw)
+
+
+def k_xcorr(n: int, **kw) -> CompiledKernel:
+    return _build("xcorr", n, **kw)
+
+
+def k_parallel_sel(n: int, **kw) -> CompiledKernel:
+    return _build("parallel_sel", n, **kw)
+
+
+def k_reduction(n: int, seg: int = programs.REDUCTION_SEG,
+                **kw) -> CompiledKernel:
+    return _build("reduction", n, seg, **kw)
 
 
 #: bench name -> (gpu-size kernel builder, scalar-size kernel builder)
@@ -106,19 +161,25 @@ def hand_benches(sizes: Optional[Dict[str, Tuple[int, ...]]] = None
     return out
 
 
+def def_args(name: str, b: "programs.Bench",
+             scalar: bool = False) -> Tuple[int, ...]:
+    """The ``kernel_def``/``k_<name>`` size arguments matching a built
+    hand bench (gpu-size by default, scalar-size with ``scalar=True``)."""
+    n = b.scalar_n if scalar else b.gpu_n
+    if name == "mat_mul":
+        return (int(np.sqrt(n)),)
+    if name == "fir":
+        return (n, 16)
+    if name == "reduction":
+        return (n, b.gpu_n // b.gpu_items)
+    return (n,)
+
+
 def compile_pair(name: str, b: "programs.Bench"
                  ) -> Tuple[CompiledKernel, CompiledKernel]:
     """(gpu-size, scalar-size) compiled kernels matching a hand bench."""
-    build = _BUILDERS[name]
-    if name == "mat_mul":
-        return (build(int(np.sqrt(b.gpu_n))),
-                build(int(np.sqrt(b.scalar_n))))
-    extra = ()
-    if name == "fir":
-        extra = (16,)
-    elif name == "reduction":
-        extra = (b.gpu_n // b.gpu_items,)
-    return build(b.gpu_n, *extra), build(b.scalar_n, *extra)
+    return (_build(name, *def_args(name, b)),
+            _build(name, *def_args(name, b, scalar=True)))
 
 
 def dsl_kernels(sizes: Optional[Dict[str, Tuple[int, ...]]] = None

@@ -23,8 +23,9 @@ from repro.dse.artifact import bench_map, dse_artifact, write_artifact
 from repro.dse.evaluate import BenchMetrics, EvaluatedPoint, Evaluator
 from repro.dse.point import (DesignPoint, DesignSpec, design_point,
                              memsys_inventory)
-from repro.dse.search import (SearchResult, analytic_objective,
-                              cycle_objective, dominates, enumerate_specs,
+from repro.dse.search import (JointPoint, JointResult, SearchResult,
+                              analytic_objective, cycle_objective, dominates,
+                              enumerate_specs, joint_frontier,
                               pareto_frontier, search, sweep_memsys)
 
 __all__ = [
@@ -32,5 +33,6 @@ __all__ = [
     "BenchMetrics", "EvaluatedPoint", "Evaluator",
     "SearchResult", "search", "enumerate_specs", "sweep_memsys",
     "pareto_frontier", "dominates", "cycle_objective", "analytic_objective",
+    "JointPoint", "JointResult", "joint_frontier",
     "bench_map", "dse_artifact", "write_artifact",
 ]

@@ -206,6 +206,15 @@ class Evaluator:
         return sum(1 for ex in _EXECUTORS.values()
                    for k in ex.memo if k in keys)
 
+    def simulate(self, cfg: GGPUConfig,
+                 names: Optional[Sequence[str]] = None) -> None:
+        """Ensure every named bench (default: all) is simulated/memoized
+        under ``cfg`` — one pipelined Scheduler drain for all misses. The
+        autotuner uses this to cost a whole candidate-schedule set in one
+        batched dispatch; subsequent ``cycles`` calls are cache hits."""
+        self._simulate_config(cfg, self.bench_names if names is None
+                              else tuple(names))
+
     def cycles(self, cfg: GGPUConfig, bench: str) -> Tuple[dict, float]:
         self._simulate_config(cfg, [bench])
         info, wall = self._lookup(cfg, bench)

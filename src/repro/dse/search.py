@@ -74,6 +74,53 @@ class SearchResult:
         return rows
 
 
+@dataclass
+class JointPoint:
+    """One co-designed candidate: a hardware design point evaluated under
+    one compiler schedule variant (``variant`` is the schedule label)."""
+    variant: str
+    point: EvaluatedPoint
+
+    def label(self) -> str:
+        return f"{self.point.label()}|{self.variant}"
+
+    def report(self) -> dict:
+        r = self.point.report()
+        r["schedule"] = self.variant
+        return r
+
+
+@dataclass
+class JointResult:
+    """The (DesignPoint, Schedule) product ranked under one dominance
+    relation — the co-designed Pareto frontier."""
+    points: List[JointPoint]
+    frontier: List[JointPoint]
+    objective: Objective = field(repr=False, default=cycle_objective)
+
+    def report(self) -> List[dict]:
+        front = {id(p) for p in self.frontier}
+        rows = []
+        for p in self.points:
+            r = p.report()
+            r["on_frontier"] = id(p) in front
+            rows.append(r)
+        return rows
+
+
+def joint_frontier(variants: Dict[str, SearchResult],
+                   objective: Objective = cycle_objective) -> JointResult:
+    """Rank the union of several per-variant search results (e.g. one
+    ``search`` per candidate compiler schedule) as a single population of
+    ``(DesignPoint, variant)`` pairs. A hardware point survives only if no
+    (point, schedule) pair dominates it — so a schedule that makes a
+    smaller design fast enough can evict a bigger design entirely."""
+    pts = [JointPoint(v, p)
+           for v, res in variants.items() for p in res.points]
+    frontier = pareto_frontier(pts, lambda jp: objective(jp.point))
+    return JointResult(points=pts, frontier=frontier, objective=objective)
+
+
 def enumerate_specs(cus: Sequence[int] = (1, 2, 4, 8),
                     freq_targets: Sequence[float] = (500.0, 590.0, 667.0,
                                                      750.0),

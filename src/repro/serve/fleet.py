@@ -12,7 +12,11 @@ estimates its service time on every device — from the learned per-kernel
 cycle model once the device has served that kernel, from an analytic
 occupancy proxy (wavefront rounds / CU parallelism, scaled by clock) on a
 cold start — and picks the device minimizing (modeled queue backlog +
-estimated service time). Modeled wall-clock of a fleet is the makespan:
+estimated service time), with both discounted by the device's physical
+shard width: a sub-mesh-bound device dispatches same-shape launches
+``shards`` abreast, so for a stream of launches (a large cohort) the wide
+device finishes earlier and wins placement even when its per-launch
+estimate ties. Modeled wall-clock of a fleet is the makespan:
 the max over devices of the sum of served launch times (devices run in
 parallel); ``pinned_makespan`` prices the whole trace on one config for
 comparison. ``benchmarks/serve_bench.py`` records the routed-vs-pinned
@@ -125,6 +129,23 @@ class Fleet:
         rounds = math.ceil(W / dev.cfg.n_cus) * req.prog.shape[0]
         return rounds * dev.cfg.issue_cycles / dev.cfg.freq_mhz
 
+    @staticmethod
+    def _shard_scale(dev: FleetDevice) -> float:
+        """Backlog scale for a device's physical shard width: a sub-mesh-
+        bound device dispatches same-shape launches ``shards`` abreast
+        (``Executor.shards`` scales the scheduler's ``plan_batch``), so a
+        stream of launches drains ~``shards``x faster in wall-clock even
+        though each launch's modeled cycles are unchanged. The router
+        weighs this into earliest-finish; ``busy_us``/``makespan_us``
+        (modeled *compute*) are untouched."""
+        return 1.0 / max(1, dev.scheduler.executor.shards)
+
+    def finish_us(self, dev: FleetDevice, req: Request) -> float:
+        """Modeled finish time of placing ``req`` on ``dev`` now: the
+        shard-width-discounted backlog plus this launch's charge."""
+        return dev.eta_us + self.estimate_us(dev, req) \
+            * self._shard_scale(dev)
+
     # -- routing -------------------------------------------------------------
 
     def submit(self, prog: np.ndarray, mem0: np.ndarray, n_items: int,
@@ -138,9 +159,8 @@ class Fleet:
     def submit_request(self, req: Request) -> int:
         """Route a prebuilt ``Request`` (the ``loadgen.replay`` target
         protocol, shared with ``Scheduler.submit_request``)."""
-        dev = min(self.devices,
-                  key=lambda d: d.eta_us + self.estimate_us(d, req))
-        est = self.estimate_us(dev, req)
+        dev = min(self.devices, key=lambda d: self.finish_us(d, req))
+        est = self.estimate_us(dev, req) * self._shard_scale(dev)
         local = dev.scheduler.submit_request(req)
         dev.eta_us += est
         ticket = self._next_ticket
@@ -176,7 +196,9 @@ class Fleet:
                 res.info["ticket"] = ticket
                 self._learned[(dev.name, self._kernel_keys[ticket])] = t_us
                 # reconcile the modeled backlog with the actual time
-                dev.eta_us += t_us - self._eta_charged.pop(ticket, t_us)
+                # (shard-discounted the same way the submit charge was)
+                scaled = t_us * self._shard_scale(dev)
+                dev.eta_us += scaled - self._eta_charged.pop(ticket, scaled)
                 out.append(res)
             for local, q in dev.scheduler.quarantined.items():
                 ticket = self._tickets[(dev.name, local)]

@@ -1,0 +1,166 @@
+"""Autotuner: schedule space, search determinism, never-worse guarantee,
+and the co-design joint frontier.
+
+Small sizes keep every test interactive; the cycle-level sweep quality is
+enforced in CI by ``benchmarks.run --compiler --fast`` against the
+committed ``BENCH_compiler.json`` baseline.
+"""
+import numpy as np
+import pytest
+
+from repro.compiler import (DEFAULT_SCHEDULE, CompileError, Schedule,
+                            ScheduleSpace, autotune, autotune_suite,
+                            codesign, compile_kernel, kernel_def)
+from repro.ggpu.engine import GGPUConfig
+
+CFG = GGPUConfig(n_cus=2)
+SMALL = ScheduleSpace(coarsen=(1, 2), hoist=(True,), branchy=(True, False),
+                      peel=(True,))
+
+
+# ---------------------------------------------------------------------------
+# schedule + space
+# ---------------------------------------------------------------------------
+
+def test_schedule_validation():
+    with pytest.raises(CompileError):
+        Schedule(coarsen=0)
+    assert DEFAULT_SCHEDULE.label() == "c1"
+    assert Schedule(coarsen=2, branchy=False).label() == "c2+select"
+
+
+def test_schedule_space_candidates_valid_and_default_first():
+    """Candidates are filtered to valid coarsen divisors, always include
+    the default, and come in deterministic default-first order."""
+    space = ScheduleSpace(coarsen=(1, 2, 3, 4))
+    cands = space.candidates(out_len=8)
+    assert cands[0] == DEFAULT_SCHEDULE
+    assert all(8 % s.coarsen == 0 for s in cands)
+    assert not any(s.coarsen == 3 for s in cands)
+    # even a space that omits coarsen=1 keeps the default candidate
+    assert DEFAULT_SCHEDULE in ScheduleSpace(coarsen=(2,)).candidates(8)
+    assert cands == space.candidates(out_len=8)
+
+
+def test_schedule_conflicts_with_legacy_coarsen_arg():
+    fn, shapes = kernel_def("copy", 16)
+    with pytest.raises(CompileError):
+        compile_kernel(fn, shapes, coarsen=4, schedule=Schedule(coarsen=2))
+    # agreeing values are fine
+    k = compile_kernel(fn, shapes, coarsen=2, schedule=Schedule(coarsen=2))
+    assert k.schedule.coarsen == 2
+
+
+def test_compiled_kernel_records_its_schedule():
+    fn, shapes = kernel_def("vec_mul", 16)
+    sched = Schedule(coarsen=4, branchy=False)
+    k = compile_kernel(fn, shapes, schedule=sched)
+    assert k.schedule == sched
+    assert compile_kernel(fn, shapes).schedule == DEFAULT_SCHEDULE
+
+
+# ---------------------------------------------------------------------------
+# autotune
+# ---------------------------------------------------------------------------
+
+def test_autotune_never_worse_and_deterministic():
+    """The default schedule is in every candidate set, so tuned <=
+    default by construction; and the same (fn, shapes, space, config)
+    always picks the same schedule."""
+    fn, shapes = kernel_def("vec_mul", 64)
+    r1 = autotune(fn, shapes, CFG, space=SMALL, name="vec_mul")
+    r2 = autotune(fn, shapes, CFG, space=SMALL, name="vec_mul")
+    assert r1.best_cycles <= r1.default_cycles
+    assert r1.speedup >= 1.0
+    assert r1.best_schedule == r2.best_schedule
+    assert [c.report() for c in r1.candidates] \
+        == [c.report() for c in r2.candidates]
+    assert sum(c.best for c in r1.candidates) == 1
+
+
+def test_autotune_candidates_are_verified_bit_exact():
+    """Every candidate is costed with Evaluator(check=True) against the
+    DEFAULT kernel's oracle output — a bad schedule cannot win by being
+    wrong. All report rows carry verified=True."""
+    fn, shapes = kernel_def("fir", 32, 4)
+    r = autotune(fn, shapes, CFG, space=ScheduleSpace(coarsen=(1, 2)),
+                 name="fir")
+    assert r.candidates and all(c.verified for c in r.candidates)
+    # the chosen kernel really is bit-exact end to end
+    ins = r.best.random_inputs(seed=0)
+    r.best.verify(ins, CFG)
+
+
+def test_autotune_finds_strict_win_on_elementwise():
+    """Coarsening amortizes the per-item TID/address overhead on the
+    elementwise benches at serving sizes — the strictly-faster witness
+    the CI invariant relies on."""
+    fn, shapes = kernel_def("copy", 512)
+    r = autotune(fn, shapes, CFG, space=SMALL, name="copy")
+    assert r.best_cycles < r.default_cycles
+    assert r.best_schedule.coarsen > 1
+
+
+def test_autotune_report_shape():
+    fn, shapes = kernel_def("copy", 16)
+    rep = autotune(fn, shapes, CFG, space=SMALL, name="copy").report()
+    assert rep["name"] == "copy"
+    assert rep["tuned_cycles"] <= rep["default_cycles"]
+    assert rep["n_candidates"] == len(rep["candidates"]) >= 2
+    assert {"schedule", "cycles", "prog_len", "verified",
+            "best"} <= set(rep["candidates"][0])
+
+
+def test_autotune_suite_runs_by_name():
+    out = autotune_suite(("copy", "vec_mul"), CFG,
+                         sizes={"copy": (16, 64), "vec_mul": (16, 64)},
+                         space=SMALL)
+    assert sorted(out) == ["copy", "vec_mul"]
+    assert all(r.best_cycles <= r.default_cycles for r in out.values())
+
+
+# ---------------------------------------------------------------------------
+# co-design
+# ---------------------------------------------------------------------------
+
+def test_codesign_joint_frontier_over_pairs():
+    """The joint frontier ranks (DesignPoint, Schedule) pairs: every
+    frontier entry carries a schedule label, the population is
+    |schedules| x |specs|, and no frontier pair is dominated by any
+    other pair."""
+    from repro.dse import dominates, enumerate_specs
+
+    defs = {n: kernel_def(n, 64) for n in ("copy", "vec_mul")}
+    specs = enumerate_specs(cus=(1, 2), freq_targets=(500.0,))
+    res = codesign(defs, specs, space=SMALL)
+    assert res.frontier
+    labels = sorted(res.results)
+    assert DEFAULT_SCHEDULE.label() in labels
+    assert res.joint.points and len(res.joint.points) \
+        == len(labels) * len(specs)
+    vecs = [(jp.point.time_us, jp.point.area_mm2)
+            for jp in res.joint.points]
+    for jp in res.frontier:
+        v = (jp.point.time_us, jp.point.area_mm2)
+        assert jp.variant in labels
+        assert not any(dominates(w, v) for w in vecs)
+    rows = res.report()
+    assert all("schedule" in r and "on_frontier" in r for r in rows)
+    assert any(r["on_frontier"] for r in rows)
+
+
+def test_codesign_rejects_empty_defs():
+    with pytest.raises(CompileError):
+        codesign({}, None)
+
+
+def test_autotune_cycle_cache_shared_across_calls():
+    """Re-running the same search is near-free: candidate programs are
+    content-addressed on the shared per-config executors, so the second
+    call starts with every (IR, schedule, config) cycle memoized."""
+    fn, shapes = kernel_def("vec_mul", 32)
+    r1 = autotune(fn, shapes, CFG, space=SMALL, name="vm_cache")
+    r2 = autotune(fn, shapes, CFG, space=SMALL, name="vm_cache")
+    assert r2.cache_hits >= len(r2.candidates)
+    assert [c.report() for c in r2.candidates] \
+        == [c.report() for c in r1.candidates]

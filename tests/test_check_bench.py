@@ -28,9 +28,17 @@ def serve_base():
     return json.loads((BASELINES / "BENCH_serve.json").read_text())
 
 
-def test_baselines_pass_against_themselves(dse_base, serve_base):
+@pytest.fixture(scope="module")
+def compiler_base():
+    return json.loads((BASELINES / "BENCH_compiler.json").read_text())
+
+
+def test_baselines_pass_against_themselves(dse_base, serve_base,
+                                           compiler_base):
     assert check_artifacts(copy.deepcopy(dse_base), dse_base) == []
     assert check_artifacts(copy.deepcopy(serve_base), serve_base) == []
+    assert check_artifacts(copy.deepcopy(compiler_base),
+                           compiler_base) == []
 
 
 def test_injected_cycle_regression_fails(dse_base):
@@ -155,6 +163,63 @@ def test_serve_host_throughput_band(serve_base):
     assert check_artifacts(fresh, serve_base, host_tol=0.25)
 
 
+def test_compiler_tuned_cycle_regression_fails(compiler_base):
+    """An injected tuned-cycle regression trips BOTH compiler gates: the
+    absolute never-worse-than-default invariant and the exact baseline
+    comparison — the satellite demonstration the compiler-smoke job
+    relies on."""
+    fresh = copy.deepcopy(compiler_base)
+    name = next(iter(fresh["autotune"]["benches"]))
+    row = fresh["autotune"]["benches"][name]
+    row["tuned_cycles"] = row["default_cycles"] + 8
+    violations = check_artifacts(fresh, compiler_base)
+    assert any(f"autotune {name}: tuned" in v for v in violations)
+    assert any(f"autotune.{name}.tuned_cycles" in v for v in violations)
+
+
+def test_compiler_strictly_better_invariant(compiler_base):
+    """The committed baseline itself has a strict win, and flattening
+    every tuned result to its default fails the gate."""
+    b = compiler_base["autotune"]["benches"]
+    assert any(r["tuned_cycles"] < r["default_cycles"] for r in b.values())
+    fresh = copy.deepcopy(compiler_base)
+    for name, row in fresh["autotune"]["benches"].items():
+        row["tuned_cycles"] = row["default_cycles"]
+        row["tuned_vs_default"] = 1.0
+    violations = check_artifacts(fresh, compiler_base)
+    assert any("strictly faster" in v for v in violations), violations
+
+
+def test_compiler_schedule_choice_and_parity_exact(compiler_base):
+    """The deterministic schedule pick, suite-parity cycles, and the
+    co-design frontier are all exact-compared."""
+    fresh = copy.deepcopy(compiler_base)
+    name = next(iter(fresh["autotune"]["benches"]))
+    fresh["autotune"]["benches"][name]["best_schedule"] = "c512"
+    assert any("best_schedule" in v
+               for v in check_artifacts(fresh, compiler_base))
+    fresh = copy.deepcopy(compiler_base)
+    pname = next(iter(fresh["suite_parity"]))
+    fresh["suite_parity"][pname]["cycles_dsl"] += 4
+    assert any("cycles_dsl" in v
+               for v in check_artifacts(fresh, compiler_base))
+    fresh = copy.deepcopy(compiler_base)
+    fresh["codesign"]["frontier"] = []
+    violations = check_artifacts(fresh, compiler_base)
+    assert any("codesign" in v for v in violations), violations
+
+
+def test_compiler_baseline_invariants_hold(compiler_base):
+    """The committed artifact satisfies the absolute autotune invariants
+    and its co-design frontier carries (DesignPoint, Schedule) pairs."""
+    from benchmarks.compiler_bench import autotune_invariants
+    assert autotune_invariants(compiler_base["autotune"]) == []
+    front = compiler_base["codesign"]["frontier"]
+    assert front and all("schedule" in r and "|" in r["label"]
+                         for r in front)
+    assert compiler_base["dse"]["schema"] == "ggpu-dse/1"
+
+
 def test_unknown_schema_rejected(dse_base):
     base = copy.deepcopy(dse_base)
     base["schema"] = "ggpu-mystery/9"
@@ -175,14 +240,21 @@ def test_cli_exit_codes(tmp_path, dse_base):
 
 
 def test_ci_wires_the_gate():
-    """The workflow must actually run the gate after all three smokes
-    (dse, single-device serve, 8-device fleet)."""
+    """The workflow must actually run the gate after all four smokes
+    (dse, single-device serve, compiler autotune, 8-device fleet)."""
     ci = (ROOT / ".github" / "workflows" / "ci.yml").read_text()
-    assert ci.count("benchmarks.check_bench") == 3
+    assert ci.count("benchmarks.check_bench") == 4
     assert "benchmarks/baselines/BENCH_dse.json" in ci
     assert ci.count("benchmarks/baselines/BENCH_serve.json") == 2
+    assert "benchmarks/baselines/BENCH_compiler.json" in ci
+    assert "--compiler --fast" in ci
     assert "cancel-in-progress" in ci
     # the fleet-smoke job and one tier-1 leg force 8 host devices
     assert ci.count("--xla_force_host_platform_device_count=8") == 2
     nightly = (ROOT / ".github" / "workflows" / "nightly.yml").read_text()
     assert "schedule" in nightly and "--compiler" in nightly
+    # the nightly sweep keeps the full schedule space (no --fast) and
+    # uploads the artifact, like the PR smoke does
+    assert "--compiler --fast" not in nightly
+    assert nightly.count("BENCH_compiler.json") >= 1
+    assert ci.count("BENCH_compiler.json") >= 2

@@ -22,7 +22,7 @@ import pytest
 sys.path.insert(0, os.path.dirname(__file__))
 from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: E402
 
-from repro.compiler import compile_kernel, dsl  # noqa: E402
+from repro.compiler import Schedule, compile_kernel, dsl  # noqa: E402
 from repro.ggpu.engine import GGPUConfig, ScalarConfig  # noqa: E402
 
 FAST = os.environ.get("GGPU_FAST_TESTS", "0") not in ("", "0")
@@ -71,10 +71,21 @@ def _random_exprfn(rng):
     return body
 
 
-def _check(fn, seed, cfg, scalar=False, lo=-100, hi=100):
-    k = compile_kernel(fn, dict(a=N, b=N), name=f"rand{seed}")
+def _check(fn, seed, cfg, scalar=False, lo=-100, hi=100, schedule=None):
+    k = compile_kernel(fn, dict(a=N, b=N), name=f"rand{seed}",
+                       schedule=schedule)
     ins = k.random_inputs(lo=lo, hi=hi, seed=seed)
     k.verify(ins, cfg, scalar=scalar)
+
+
+def _random_schedule(rng, out_len):
+    """A random valid lowering schedule for a kernel with ``out_len``
+    outputs (coarsen drawn from the valid divisors)."""
+    divs = [d for d in (1, 2, 4, 8) if out_len % d == 0]
+    return Schedule(coarsen=int(rng.choice(divs)),
+                    hoist=bool(rng.integers(0, 2)),
+                    branchy=bool(rng.integers(0, 2)),
+                    peel=bool(rng.integers(0, 2)))
 
 
 @pytest.mark.parametrize("seed", range(3 if FAST else 6))
@@ -119,6 +130,41 @@ def test_fixed_expression_machine_matrix(machine, cus, memsys):
         _check(fn, 42, ScalarConfig(), scalar=True)
     else:
         _check(fn, 42, GGPUConfig(n_cus=cus, memsys=memsys))
+
+
+@pytest.mark.parametrize("memsys", MEMSYS)
+@pytest.mark.parametrize("machine,cus", MACHINES)
+def test_random_schedules_machine_matrix(machine, cus, memsys):
+    """Randomized lowering schedules (the autotuner's candidate axes:
+    coarsen x hoist x branchy x peel) on the guarded mixed expression,
+    each differentially verified vs the IR oracle across the machine x
+    memory-system matrix."""
+    def fn(a, b):
+        return (dsl.stencil(a, [1, 1], [-1, 1]) * b + 3).seg_sum(8)
+
+    if cus is None and memsys != "shared":
+        pytest.skip("scalar baseline models the shared cache")
+    rng = np.random.default_rng(1234)
+    for i in range(2 if FAST else 4):
+        sched = _random_schedule(rng, out_len=N // 8)
+        if cus is None:
+            _check(fn, 50 + i, ScalarConfig(), scalar=True,
+                   schedule=sched)
+        else:
+            _check(fn, 50 + i, GGPUConfig(n_cus=cus, memsys=memsys),
+                   schedule=sched)
+
+
+@pytest.mark.parametrize("seed", range(2 if FAST else 4))
+def test_random_expression_random_schedule(seed):
+    """Random expression trees under random schedules stay bit-exact —
+    the coverage claim behind autotuning: ANY candidate the search can
+    emit is oracle-verified."""
+    rng = np.random.default_rng(500 + seed)
+    fn = _random_exprfn(rng)
+    k0 = compile_kernel(fn, dict(a=N, b=N), name=f"sched{seed}")
+    sched = _random_schedule(rng, k0.kernel.out_len)
+    _check(fn, seed, GGPUConfig(n_cus=2), schedule=sched)
 
 
 @given(st.integers(min_value=0, max_value=2 ** 31 - 1),

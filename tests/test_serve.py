@@ -319,6 +319,40 @@ def test_fleet_routes_mixed_trace_and_beats_pinning():
         assert fleet.makespan_us() < pinned_makespan(cfg, trace)
 
 
+def test_fleet_shard_width_wins_large_cohorts():
+    """Two identical configs, one backed by a 4-wide physical mesh slice
+    (stubbed via ``Executor.shards`` — real meshes are covered by the
+    sharding subprocess tests): the router discounts the wide device's
+    backlog by its shard width, so a large same-shape cohort
+    overwhelmingly lands there, while modeled compute (busy_us /
+    makespan) stays shard-agnostic."""
+    b = programs._copy(16, 128)
+    fleet = Fleet([("narrow", CFG), ("wide", CFG)], max_batch=4)
+    wide = next(d for d in fleet.devices if d.name == "wide")
+    wide.scheduler.executor.shards = 4          # stub the physical width
+
+    for seed in range(16):
+        fleet.submit(b.gpu_prog, _variant_mem(b, seed), b.gpu_items)
+    rep = fleet.report()
+    assert rep["placement"]["wide"] > rep["placement"]["narrow"]
+    # estimate_us itself is shard-agnostic; only the finish model differs
+    req = Request(b.gpu_prog, b.gpu_mem, b.gpu_items)
+    narrow = next(d for d in fleet.devices if d.name == "narrow")
+    assert fleet.estimate_us(wide, req) == fleet.estimate_us(narrow, req)
+    assert fleet.finish_us(wide, req) < fleet.finish_us(narrow, req)
+
+    results = fleet.drain()
+    assert len(results) == 16
+    for res in results:
+        _check(res, run_kernel(b.gpu_prog,
+                               _variant_mem(b, res.info["ticket"]),
+                               b.gpu_items, CFG))
+    # modeled compute accounting is unchanged by the routing discount
+    rep = fleet.report()
+    assert rep["busy_us"]["wide"] >= rep["busy_us"]["narrow"]
+    assert fleet.makespan_us() == max(rep["busy_us"].values())
+
+
 def test_engine_prefill_eos_regression():
     """A sequence whose *first* generated token (sampled from prefill) is
     EOS must stop immediately instead of decoding for max_new steps."""
