@@ -7,10 +7,15 @@ CI runs the ``dse-smoke`` / ``serve-smoke`` jobs, then::
 
 and fails the build on any violation, so a perf regression breaks CI
 instead of uploading quietly. The artifact kind is auto-detected from the
-``schema`` field (``ggpu-dse/1`` / ``ggpu-serve/3`` / ``ggpu-compiler/2``
+``schema`` field (``ggpu-dse/1`` / ``ggpu-serve/4`` / ``ggpu-compiler/2``
 — the compiler gate also re-enforces the absolute autotune invariants on
 the fresh artifact: tuned never worse than the default schedule anywhere,
-strictly better on >= 1 bench, all candidates oracle-verified).
+strictly better on >= 1 bench, all candidates oracle-verified). A fresh
+serve artifact carrying ``"sections": ["graph"]`` (the partial output of
+``benchmarks.run --graph``, the CI ``graph-smoke`` job) is gated on its
+graph section only — absolute invariants (bit-exact, pipelined >=
+GRAPH_MIN_SPEEDUP over the host-staged baseline, one dispatch per stage)
+plus bands against the full committed serve baseline.
 
 Tolerance bands per metric class:
 
@@ -42,7 +47,7 @@ import sys
 from typing import List, Optional
 
 DSE_SCHEMA = "ggpu-dse/1"
-SERVE_SCHEMA = "ggpu-serve/3"
+SERVE_SCHEMA = "ggpu-serve/4"
 COMPILER_SCHEMA = "ggpu-compiler/2"
 
 
@@ -106,9 +111,49 @@ def check_dse(fresh: dict, base: dict, tol: float,
     return v
 
 
+def check_serve_graph(fresh: dict, base: dict, tol: float,
+                      host_tol: float) -> List[str]:
+    """The ``graph`` section's own gate: absolute invariants on the fresh
+    artifact (bit-exactness, >= GRAPH_MIN_SPEEDUP, one dispatch per
+    stage) plus banded comparison against the committed baseline. Also
+    the whole check for a partial ``--graph`` smoke artifact."""
+    from benchmarks.serve_bench import graph_invariant_problems
+
+    v: List[str] = []
+    _exact(v, "schema", fresh.get("schema"), base.get("schema"))
+    v += graph_invariant_problems(fresh)
+    _graph_vs_baseline(v, fresh, base, host_tol)
+    return v
+
+
+def _graph_vs_baseline(v: List[str], fresh: dict, base: dict,
+                       host_tol: float) -> None:
+    """Banded/exact comparison of the ``graph`` section vs the committed
+    baseline (shared by the full-artifact and partial-artifact gates)."""
+    fg, bg = fresh.get("graph", {}), base.get("graph", {})
+    _exact(v, "graph.bit_exact", fg.get("bit_exact"),
+           bg.get("bit_exact"))
+    _exact(v, "graph.stages", fg.get("stages"), bg.get("stages"))
+    _exact(v, "graph.pipelined.dispatches",
+           fg.get("pipelined", {}).get("dispatches"),
+           bg.get("pipelined", {}).get("dispatches"))
+    # host wall-clock metrics: generous ratio bands (runner-dependent)
+    _ratio_band(v, "graph.speedup", fg.get("speedup"),
+                bg.get("speedup"), host_tol)
+    for path in ("pipelined", "host_staged"):
+        _ratio_band(v, f"graph.{path}.chains_per_sec",
+                    fg.get(path, {}).get("chains_per_sec"),
+                    bg.get(path, {}).get("chains_per_sec"), host_tol)
+
+
 def check_serve(fresh: dict, base: dict, tol: float,
                 host_tol: float) -> List[str]:
     from benchmarks.serve_bench import invariant_problems
+
+    if fresh.get("sections") == ["graph"]:
+        # partial artifact from ``benchmarks.run --graph`` (graph-smoke):
+        # gate only the graph section against the full baseline
+        return check_serve_graph(fresh, base, tol, host_tol)
 
     v: List[str] = []
     _exact(v, "schema", fresh.get("schema"), base.get("schema"))
@@ -155,6 +200,7 @@ def check_serve(fresh: dict, base: dict, tol: float,
                 host_tol)
     _ratio_band(v, "latency.rate_per_s", fl.get("rate_per_s"),
                 bl.get("rate_per_s"), host_tol)
+    _graph_vs_baseline(v, fresh, base, host_tol)
     return v
 
 
@@ -206,13 +252,20 @@ def check_compiler(fresh: dict, base: dict, tol: float,
 
 
 def check_artifacts(fresh: dict, base: dict, tol: float = 0.25,
-                    host_tol: float = 3.0) -> List[str]:
+                    host_tol: float = 3.0,
+                    section: Optional[str] = None) -> List[str]:
     """All violations of ``fresh`` against ``base`` (empty = gate passes).
-    """
+    ``section="graph"`` restricts a serve check to the graph section —
+    the ``benchmarks.run --graph`` partial artifact (which also carries a
+    ``sections`` marker that triggers the same restriction)."""
     schema = base.get("schema")
     if schema == DSE_SCHEMA:
         return check_dse(fresh, base, tol, host_tol)
     if schema == SERVE_SCHEMA:
+        if section == "graph":
+            return check_serve_graph(fresh, base, tol, host_tol)
+        if section is not None:
+            return [f"unknown serve section {section!r}"]
         return check_serve(fresh, base, tol, host_tol)
     if schema == COMPILER_SCHEMA:
         return check_compiler(fresh, base, tol, host_tol)
@@ -232,12 +285,17 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="relative band for raw host wall-clock metrics "
                          "(default 3.0 — simulator speed varies across "
                          "runners)")
+    ap.add_argument("--section", default=None,
+                    help="gate only one section of a serve artifact "
+                         "(currently: graph — the graph-smoke job's "
+                         "partial BENCH_graph.json)")
     args = ap.parse_args(argv)
     with open(args.fresh) as f:
         fresh = json.load(f)
     with open(args.baseline) as f:
         base = json.load(f)
-    violations = check_artifacts(fresh, base, args.tol, args.host_tol)
+    violations = check_artifacts(fresh, base, args.tol, args.host_tol,
+                                 section=args.section)
     if violations:
         print(f"{len(violations)} bench regression(s) vs {args.baseline}:",
               file=sys.stderr)

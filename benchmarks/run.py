@@ -12,11 +12,15 @@ search) and writes the ``BENCH_dse.json`` artifact.
 (``--dse --fast`` is the 2-point CI smoke).
 ``--serve`` runs the serving-subsystem benchmark — throughput,
 mesh-sharded scheduler vs single-device, open-loop Poisson tail latency,
-and fleet routing — and writes the ``BENCH_serve.json`` artifact (schema
-``ggpu-serve/3``; ``--serve --fast`` is the CI ``serve-smoke`` job, and
-the ``fleet-smoke`` job runs it again under
-``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise real
-8-way sharding).
+fleet routing, and device-resident kernel graphs — and writes the
+``BENCH_serve.json`` artifact (schema ``ggpu-serve/4``; ``--serve
+--fast`` is the CI ``serve-smoke`` job, and the ``fleet-smoke`` job runs
+it again under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to
+exercise real 8-way sharding).
+``--graph`` runs only the kernel-graph section (device-resident
+pipelined vs host-staged chain execution, the CI ``graph-smoke`` job)
+and writes the partial ``BENCH_graph.json`` artifact that ``check_bench
+--section graph`` gates against the full serve baseline.
 ``--compiler`` runs the tensor-DSL compiler sweep (suite parity vs the
 hand-written benches + a compiled-workload DSE search) and writes
 ``BENCH_compiler.json`` (the nightly ``compiler-sweep`` job).
@@ -53,6 +57,11 @@ def main() -> None:
         from benchmarks import serve_bench
         art = serve_bench.bench_serve(emit, fast=fast)
         _fail(serve_bench.invariant_problems(art))
+        return
+    if "--graph" in sys.argv:
+        from benchmarks import serve_bench
+        art = serve_bench.bench_graph_only(emit, fast=fast)
+        _fail(serve_bench.graph_invariant_problems(art))
         return
     if "--dse" in sys.argv:
         from benchmarks import engine_bench

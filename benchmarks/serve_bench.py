@@ -1,7 +1,7 @@
 """Serving-subsystem benchmark (``python -m benchmarks.run --serve``).
 
-Four sections, all recorded in the standardized ``BENCH_serve.json``
-artifact (schema ``ggpu-serve/3``, path overridable via
+Five sections, all recorded in the standardized ``BENCH_serve.json``
+artifact (schema ``ggpu-serve/4``, path overridable via
 ``GGPU_SERVE_OUT``):
 
   * **throughput** — a bursty same-kernel trace served through the
@@ -37,9 +37,32 @@ artifact (schema ``ggpu-serve/3``, path overridable via
     from a ``repro.dse.search`` Pareto front (every device dispatched
     before any is collected), and the routed fleet's modeled makespan is
     compared against pinning the whole trace to either single config.
+  * **graph** — device-resident kernel graphs: N instances of a 3-stage
+    map→reduce→scale chain (split out of one traced expression by
+    ``repro.compiler.compile_graph``) served three ways. **pipelined**
+    submits every stage up front with dependency edges and drains once —
+    the dependency-aware scheduler folds each stage across instances
+    into one cohort dispatch and feeds producers into consumers entirely
+    on the device (``BlockPatch``), zero host round-trips between
+    stages. **host_staged** is the gated baseline: the pre-graph DAG
+    idiom, each chain executed stage-by-stage with a full
+    ``LaunchHandle`` download and host re-staging per edge (without
+    dependency edges the per-chain barrier structure also hides
+    cross-chain folding from the scheduler). **host_folded** is reported
+    for calibration: the strongest manual workaround, stage-major
+    submission with one drain barrier + download + re-stage per stage —
+    it recovers cohort folding, so the residual vs pipelined isolates
+    the pure round-trip/overlap cost (parity on a single-core host
+    where simulator compute dominates). ``speedup`` (pipelined vs
+    host_staged) must clear ``GRAPH_MIN_SPEEDUP``, the pipelined run
+    must execute in at most one dispatch per stage, and all three paths
+    must be bit-exact against the ``Program`` oracle — all enforced by
+    the invariants below and by ``check_bench``.
 
-``--fast`` shrinks the trace and the DSE grid (the CI ``serve-smoke``
-and ``fleet-smoke`` jobs).
+``--fast`` shrinks the traces and the DSE grid (the CI ``serve-smoke``,
+``fleet-smoke``, and ``graph-smoke`` jobs; ``benchmarks.run --graph``
+runs the graph section alone and writes a partial ``BENCH_graph.json``
+that ``check_bench --section graph`` gates against the full baseline).
 """
 from __future__ import annotations
 
@@ -49,9 +72,13 @@ import time
 
 import numpy as np
 
-SCHEMA = "ggpu-serve/3"
+SCHEMA = "ggpu-serve/4"
 # pipelined async drain must beat the sync serial drain by this factor
 ASYNC_MIN_SPEEDUP = 1.5
+# device-resident pipelined graph execution must beat the host-staged
+# per-chain baseline by this factor (the win is structural — folding plus
+# zero host round-trips — so it holds even on a single-core host)
+GRAPH_MIN_SPEEDUP = 1.5
 # sharded scheduler must beat the single-device async scheduler by this
 # factor when >= this many devices are simulated (dispatch amortization
 # alone clears it on one core; real parallel hardware adds more)
@@ -340,6 +367,124 @@ def bench_fleet(emit, fast: bool) -> dict:
     return rep
 
 
+def bench_graph(emit, fast: bool) -> dict:
+    """Device-resident pipelined kernel-graph execution vs the
+    host-staged baselines (module doc) on a 3-stage map→reduce→scale
+    chain, bit-exact against the ``Program`` oracle."""
+    from repro.compiler import compile_graph
+    from repro.ggpu.engine import GGPUConfig
+    from repro.serve import (Scheduler, extract_outputs,
+                             run_chains_host_staged,
+                             run_programs_host_staged, submit_programs)
+
+    cfg = GGPUConfig(n_cus=2)
+    n, seg = 256, 64
+    n_inst = 8 if fast else 16
+    reps = 3
+    program = compile_graph(
+        lambda a, b: (a * b).seg_sum(seg) * 3 + 1,
+        {"a": n, "b": n}, name="map_reduce_scale")
+    rng = np.random.default_rng(7)
+
+    def instances():
+        return [{"a": rng.integers(-100, 100, n).astype(np.int32),
+                 "b": rng.integers(-100, 100, n).astype(np.int32)}
+                for _ in range(n_inst)]
+
+    # one scheduler per path, same config (shared executor/envelope
+    # cache); max_batch = n_inst so each stage folds into one cohort
+    pipe = Scheduler(cfg, max_batch=n_inst, max_inflight=8)
+    staged = Scheduler(cfg, max_batch=n_inst, max_inflight=8)
+    folded = Scheduler(cfg, max_batch=n_inst, max_inflight=8)
+
+    # warm every path's chunk envelopes so steady state never re-traces
+    submit_programs(pipe, program, instances())
+    pipe.drain()
+    run_chains_host_staged(staged, program, instances())
+    run_programs_host_staged(folded, program, instances())
+
+    best_pipe = best_staged = best_folded = float("inf")
+    outs = staged_outs = None
+    dispatches = 0
+    for _ in range(reps):
+        ins = instances()
+        st = pipe.executor.stats
+        d0 = st.dispatches
+        t0 = time.perf_counter()
+        handles = submit_programs(pipe, program, ins)
+        outs = extract_outputs(pipe.drain(), handles)
+        best_pipe = min(best_pipe, time.perf_counter() - t0)
+        dispatches = st.dispatches - d0
+        t0 = time.perf_counter()
+        staged_outs = run_chains_host_staged(staged, program, ins)
+        best_staged = min(best_staged, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        folded_outs = run_programs_host_staged(folded, program, ins)
+        best_folded = min(best_folded, time.perf_counter() - t0)
+    # audit the last rep's results against the NumPy oracle: all three
+    # execution paths must agree bit-for-bit
+    refs = [program.reference(i) for i in ins]
+    bit_exact = all(
+        np.array_equal(o, r) and np.array_equal(s, r)
+        and np.array_equal(f, r)
+        for o, s, f, r in zip(outs, staged_outs, folded_outs, refs))
+
+    speedup = best_staged / best_pipe
+    row = {
+        "device": f"{cfg.n_cus}cu/{cfg.memsys}",
+        "program": program.name,
+        "stages": [ck.name for ck in program.stages],
+        "n": n,
+        "seg": seg,
+        "instances": n_inst,
+        "launches": 3 * n_inst,
+        "pipelined": {"wall_s": round(best_pipe, 4),
+                      "chains_per_sec": round(n_inst / best_pipe, 2),
+                      "dispatches": dispatches},
+        "host_staged": {"wall_s": round(best_staged, 4),
+                        "chains_per_sec": round(n_inst / best_staged, 2)},
+        "host_folded": {"wall_s": round(best_folded, 4),
+                        "chains_per_sec": round(n_inst / best_folded, 2)},
+        "speedup": round(speedup, 3),
+        "folded_speedup": round(best_folded / best_pipe, 3),
+        "bit_exact": bit_exact,
+    }
+    emit("serve/graph/pipelined", best_pipe * 1e6 / n_inst,
+         f"chains_per_sec={row['pipelined']['chains_per_sec']} "
+         f"dispatches={dispatches} for {3 * n_inst} launches")
+    emit("serve/graph/host_staged", best_staged * 1e6 / n_inst,
+         f"speedup={row['speedup']}x pipelined over per-chain host "
+         f"staging (folded_speedup={row['folded_speedup']}x, "
+         f"bit_exact={bit_exact})")
+    return row
+
+
+def graph_invariant_problems(art: dict) -> list:
+    """Absolute health invariants of the ``graph`` section (shared by the
+    full-artifact check and the partial ``--graph`` smoke run)."""
+    problems = []
+    g = art.get("graph", {})
+    if not g:
+        return ["graph section missing from artifact"]
+    if not g.get("bit_exact"):
+        problems.append(
+            "graph.bit_exact: device-resident pipelined results diverge "
+            "from the Program oracle / independently-run stages")
+    spd = g.get("speedup", 0)
+    if spd < GRAPH_MIN_SPEEDUP:
+        problems.append(
+            f"graph.speedup {spd} < {GRAPH_MIN_SPEEDUP}: device-resident "
+            "pipelined execution must beat the host-staged baseline")
+    stages = len(g.get("stages", ())) or 3
+    disp = g.get("pipelined", {}).get("dispatches", -1)
+    if not 0 < disp <= stages:
+        problems.append(
+            f"graph.pipelined.dispatches {disp}: {g.get('instances')} "
+            f"chains x {stages} stages must fold into at most "
+            f"{stages} dispatches (one cohort per stage)")
+    return problems
+
+
 def invariant_problems(art: dict) -> list:
     """Smoke invariants a healthy serve run must satisfy — checked by
     ``benchmarks.run`` after the artifact is written so a broken result
@@ -390,11 +535,12 @@ def invariant_problems(art: dict) -> list:
     if fleet.get("quarantined"):
         problems.append(
             f"fleet quarantined launches: {fleet['quarantined']}")
+    problems += graph_invariant_problems(art)
     return problems
 
 
 def bench_serve(emit, fast: bool = False, out: str = None) -> dict:
-    """Run all four sections and write the ``BENCH_serve.json`` artifact;
+    """Run all five sections and write the ``BENCH_serve.json`` artifact;
     returns the artifact dict."""
     import jax
 
@@ -404,6 +550,7 @@ def bench_serve(emit, fast: bool = False, out: str = None) -> dict:
     latency = bench_latency(emit, fast,
                             throughput["async"]["launches_per_sec"])
     fleet = bench_fleet(emit, fast)
+    graph = bench_graph(emit, fast)
     art = {
         "schema": SCHEMA,
         "n_devices": jax.device_count(),
@@ -411,6 +558,7 @@ def bench_serve(emit, fast: bool = False, out: str = None) -> dict:
         "sync_launches_per_sec": throughput["sync"]["launches_per_sec"],
         "async_speedup": throughput["async_speedup"],
         "sharded_speedup": sharded["speedup"],
+        "graph_speedup": graph["speedup"],
         "cold_trace_s": throughput["cold_trace_s"],
         "batch_occupancy": throughput["batch_occupancy"],
         "cache_hit_rate": throughput["executor_cache"]["hit_rate"],
@@ -418,6 +566,30 @@ def bench_serve(emit, fast: bool = False, out: str = None) -> dict:
         "sharded": sharded,
         "latency": latency,
         "fleet": fleet,
+        "graph": graph,
+    }
+    with open(out, "w") as f:
+        json.dump(art, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("serve/artifact", 0.0, f"wrote {out}")
+    return art
+
+
+def bench_graph_only(emit, fast: bool = False, out: str = None) -> dict:
+    """Run just the graph section (the CI ``graph-smoke`` job) and write
+    a partial ``BENCH_graph.json`` artifact — same schema tag plus a
+    ``sections`` marker so ``check_bench --section graph`` knows it is
+    gating a subset against the full committed baseline."""
+    import jax
+
+    out = out or os.environ.get("GGPU_GRAPH_OUT", "BENCH_graph.json")
+    graph = bench_graph(emit, fast)
+    art = {
+        "schema": SCHEMA,
+        "sections": ["graph"],
+        "n_devices": jax.device_count(),
+        "graph_speedup": graph["speedup"],
+        "graph": graph,
     }
     with open(out, "w") as f:
         json.dump(art, f, indent=2, sort_keys=True)

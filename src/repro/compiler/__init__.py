@@ -17,7 +17,8 @@ from repro.compiler.autotune import (DEFAULT_SPACE, SMOKE_SPACE,
                                      AutotuneResult, CodesignResult,
                                      ScheduleSpace, autotune,
                                      autotune_suite, codesign)
-from repro.compiler.frontend import (ScatterTensor, Tensor, compile_kernel,
+from repro.compiler.frontend import (GraphTensor, Program, ScatterTensor,
+                                     Tensor, compile_graph, compile_kernel,
                                      dsl)
 from repro.compiler.ir import CompileError
 from repro.compiler.lower import DEFAULT_SCHEDULE, CompiledKernel, Schedule
@@ -25,7 +26,8 @@ from repro.compiler.suite import (compile_pair, def_args, dsl_benches,
                                   dsl_kernels, hand_benches, kernel_def)
 
 __all__ = [
-    "compile_kernel", "dsl", "Tensor", "ScatterTensor",
+    "compile_kernel", "compile_graph", "Program", "GraphTensor",
+    "dsl", "Tensor", "ScatterTensor",
     "CompiledKernel", "CompileError", "dsl_benches", "dsl_kernels",
     "hand_benches", "compile_pair", "kernel_def", "def_args",
     "Schedule", "DEFAULT_SCHEDULE", "ScheduleSpace", "DEFAULT_SPACE",

@@ -28,6 +28,7 @@ CU/wavefront tiling the engine applies to ``n_items``.
 """
 from __future__ import annotations
 
+import dataclasses
 import inspect
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -35,9 +36,10 @@ import numpy as np
 
 from repro.compiler import opt
 from repro.compiler.ir import (CompileError, Const, Expr, Item, Kernel,
-                               Load)
+                               Load, children)
 from repro.compiler.ir import wrap32 as ir_wrap32
-from repro.compiler.lower import (CompiledKernel, Schedule, lower_kernel)
+from repro.compiler.lower import (DEFAULT_SCHEDULE, CompiledKernel, Schedule,
+                                  lower_kernel)
 
 Shape = Tuple[int, ...]
 
@@ -376,3 +378,315 @@ def compile_kernel(fn: Callable, shapes: Union[Dict[str, object],
         arrays=arrays, out_len=out.out_len,
         n_items=out.out_len // coarsen, stores=stores)
     return lower_kernel(kernel, schedule)
+
+
+# ---------------------------------------------------------------------------
+# compile_graph: split one traced expression into a multi-kernel Program
+# ---------------------------------------------------------------------------
+
+class _GraphBuilder:
+    """Trace-time stage accumulator for ``compile_graph``: each
+    materialization appends one stage (a tensor whose elements land in a
+    named virtual buffer earlier stages and graph inputs feed)."""
+
+    def __init__(self):
+        # (buffer name, the tensor/scatter whose elements fill it)
+        self.stages: List[Tuple[str, object]] = []
+
+    @staticmethod
+    def buffer_name(idx: int) -> str:
+        # the leading dot keeps generated names out of the identifier
+        # space, so they can never collide with a graph parameter
+        return f".s{idx}"
+
+    def materialize(self, t: "GraphTensor") -> "GraphTensor":
+        """Cut here: record ``t`` as a stage and return the tensor that
+        reads the stage's output buffer."""
+        if t.buffer is not None:
+            return t
+        buf = self.buffer_name(len(self.stages))
+        self.stages.append((buf, t))
+        return GraphTensor(t.shape, lambda i, _b=buf: Load(_b, i),
+                           self, buffer=buf)
+
+
+class GraphTensor(Tensor):
+    """A ``Tensor`` that records *stage cuts* while tracing a graph:
+    a reduction (``seg_sum``/``sum``/``@``) materializes its fused
+    elementwise operands as map stages, and any further use of a reduced
+    expression materializes the reduction itself — so one traced
+    expression splits into a pipeline of individually-lowerable kernels
+    at exactly the reduction boundaries. ``buffer`` names the virtual
+    array this tensor *is* (a graph input or a stage output); ``None``
+    means a fused, not-yet-materialized expression. Plain ``Tensor``
+    operands (e.g. from ``dsl`` helpers) fuse into the consuming stage
+    without extra cuts."""
+
+    def __init__(self, shape: Shape, elem: Callable[[Expr], Expr],
+                 builder: _GraphBuilder, has_reduce: bool = False,
+                 buffer: Optional[str] = None):
+        super().__init__(shape, elem)
+        self.builder = builder
+        self.has_reduce = has_reduce
+        self.buffer = buffer
+
+    def _lift(self, other):
+        if isinstance(other, (int, np.integer)):
+            v = ir_wrap32(int(other))
+            return GraphTensor(self.shape, lambda i, _v=v: Const(_v),
+                               self.builder)
+        if isinstance(other, GraphTensor) and other.has_reduce:
+            return self.builder.materialize(other)
+        return other
+
+    def _binary(self, other, op: str, rev: bool = False):
+        me = (self.builder.materialize(self) if self.has_reduce else self)
+        other = me._lift(other)
+        if not isinstance(other, Tensor):
+            return NotImplemented
+        if other.shape != me.shape:
+            raise CompileError(f"shape mismatch: {me.shape} vs "
+                               f"{other.shape} for {op!r}")
+        a, b = (other, me) if rev else (me, other)
+        return GraphTensor(me.shape,
+                           lambda i: opt.binop(op, a.elem(i), b.elem(i)),
+                           self.builder)
+
+    def __neg__(self):
+        me = (self.builder.materialize(self) if self.has_reduce else self)
+        return GraphTensor(me.shape,
+                           lambda i: opt.sub(Const(0), me.elem(i)),
+                           self.builder)
+
+    def seg_sum(self, seg: int) -> "GraphTensor":
+        n = self.size
+        if seg < 1 or n % seg:
+            raise CompileError(
+                f"seg_sum: segment {seg} must divide the size {n}")
+        src = self if self.buffer is not None \
+            else self.builder.materialize(self)
+        return GraphTensor((n // seg,), lambda i: opt.reduce_sum(
+            seg, lambda k: src.elem(opt.add(opt.mul(i, seg), k))),
+            self.builder, has_reduce=True)
+
+    def __matmul__(self, other):
+        if not isinstance(other, Tensor):
+            return NotImplemented
+        if len(self.shape) != 2 or len(other.shape) != 2 \
+                or self.shape[1] != other.shape[0]:
+            raise CompileError(f"matmul shapes {self.shape} @ "
+                               f"{other.shape} do not agree")
+        a = self if self.buffer is not None \
+            else self.builder.materialize(self)
+        b = other
+        if isinstance(b, GraphTensor) and b.buffer is None:
+            b = self.builder.materialize(b)
+        m, kk = a.shape
+        _, n = b.shape
+
+        def elem(i: Expr) -> Expr:
+            row = opt.div(i, n)
+            col = opt.rem(i, n)
+            return opt.reduce_sum(kk, lambda t: opt.mul(
+                a.elem(opt.add(opt.mul(row, kk), t)),
+                b.elem(opt.add(opt.mul(t, n), col))))
+
+        return GraphTensor((m, n), elem, self.builder, has_reduce=True)
+
+
+def _load_names(stores) -> set:
+    """All array names a stage's store expressions read."""
+    seen: set = set()
+    names: set = set()
+    work = [e for pair in stores for e in pair]
+    while work:
+        e = work.pop()
+        if id(e) in seen:
+            continue
+        seen.add(id(e))
+        if isinstance(e, Load):
+            names.add(e.array)
+        work.extend(children(e))
+    return names
+
+
+def _stage_schedule(schedules, idx: int) -> Schedule:
+    if schedules is None:
+        return DEFAULT_SCHEDULE
+    if isinstance(schedules, dict):
+        s = schedules.get(idx)
+    else:
+        s = schedules[idx] if idx < len(schedules) else None
+    return s if s is not None else DEFAULT_SCHEDULE
+
+
+@dataclasses.dataclass
+class Program:
+    """A compiled multi-kernel graph: ``stages`` in topological order and
+    the wiring of each stage's input arrays to graph inputs or earlier
+    stages' outputs (``sources[idx][array] = ("input", name) |
+    ("stage", j)``). Stage ``idx`` writes the virtual buffer ``.s{idx}``;
+    the last stage's output is the graph's."""
+    name: str
+    stages: List[CompiledKernel]
+    sources: List[Dict[str, Tuple[str, object]]]
+    in_sizes: Dict[str, int]
+
+    @property
+    def out_len(self) -> int:
+        return self.stages[-1].kernel.out_len
+
+    def _stage_inputs(self, idx: int, inputs: Dict[str, np.ndarray],
+                      outs: Dict[int, np.ndarray]) -> Dict[str, np.ndarray]:
+        return {arr: (inputs[ref] if kind == "input" else outs[ref])
+                for arr, (kind, ref) in self.sources[idx].items()}
+
+    def reference(self, inputs) -> np.ndarray:
+        """The graph's expected output: each stage's NumPy oracle chained
+        through the stage wiring — the bit-exactness target for every
+        execution strategy (host-staged or device-resident)."""
+        inputs = {n: np.asarray(v, np.int32).reshape(-1)
+                  for n, v in dict(inputs).items()}
+        missing = set(self.in_sizes) - set(inputs)
+        if missing:
+            raise CompileError(f"missing inputs: {sorted(missing)}")
+        outs: Dict[int, np.ndarray] = {}
+        val = None
+        for idx, ck in enumerate(self.stages):
+            val = np.asarray(
+                ck.reference(self._stage_inputs(idx, inputs, outs)),
+                np.int32)
+            outs[idx] = val
+        return val
+
+    def run_host(self, inputs, cfg) -> np.ndarray:
+        """Execute stage-by-stage on the engine with host-staged chaining
+        (download each stage's full output, re-stage it into the next
+        stage's memory image) — the independently-run-stages baseline the
+        device-resident serving path must match bit-exactly."""
+        inputs = {n: np.asarray(v, np.int32).reshape(-1)
+                  for n, v in dict(inputs).items()}
+        outs: Dict[int, np.ndarray] = {}
+        val = None
+        for idx, ck in enumerate(self.stages):
+            val, _ = ck.run(self._stage_inputs(idx, inputs, outs), cfg)
+            outs[idx] = val
+        return val
+
+    def random_inputs(self, lo: int = -100, hi: int = 100,
+                      seed: int = 0) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(seed)
+        return {n: rng.integers(lo, hi, ln).astype(np.int32)
+                for n, ln in self.in_sizes.items()}
+
+
+def compile_graph(fn: Callable, shapes: Union[Dict[str, object],
+                                              Sequence[object]],
+                  name: Optional[str] = None,
+                  schedules: Union[Dict[int, Schedule],
+                                   Sequence[Optional[Schedule]],
+                                   None] = None) -> Program:
+    """Trace ``fn`` and split it at reduction boundaries into a
+    multi-kernel ``Program`` graph.
+
+    Where ``compile_kernel`` fuses everything into one kernel,
+    ``compile_graph`` cuts the traced expression wherever a reduction
+    consumes a fused elementwise chain (the chain becomes a *map* stage)
+    and wherever a reduced expression is consumed further (the reduction
+    becomes its own stage) — e.g. ``(a * b).seg_sum(64) * k`` compiles to
+    a map → reduce → scale pipeline of three kernels. Each stage is an
+    ordinary ``CompiledKernel``, individually autotunable: ``schedules``
+    maps stage index → ``Schedule`` (dict or sequence; missing entries
+    lower with the default schedule). An expression with no reduction
+    compiles to a single-stage program identical to ``compile_kernel``.
+    The serving layer executes programs with device-resident inter-stage
+    chaining (``repro.serve.graphs.submit_program``)."""
+    params = list(inspect.signature(fn).parameters)
+    if isinstance(shapes, dict):
+        missing = [p for p in params if p not in shapes]
+        if missing:
+            raise CompileError(f"no shape given for parameters {missing}")
+        shape_list = [shapes[p] for p in params]
+    else:
+        if len(shapes) != len(params):
+            raise CompileError(f"{len(params)} parameters but "
+                               f"{len(shapes)} shapes")
+        shape_list = list(shapes)
+
+    builder = _GraphBuilder()
+    sizes: Dict[str, int] = {}
+    placeholders: List[GraphTensor] = []
+    for p, s in zip(params, shape_list):
+        shape = _norm_shape(s)
+        sizes[p] = _size(shape)
+        placeholders.append(
+            GraphTensor(shape, lambda i, _p=p: Load(_p, i), builder,
+                        buffer=p))
+
+    out = fn(*placeholders)
+    gname = name or getattr(fn, "__name__", "graph").replace(
+        "<lambda>", "graph")
+    if isinstance(out, ScatterTensor):
+        builder.stages.append(
+            (builder.buffer_name(len(builder.stages)), out))
+    elif isinstance(out, Tensor):
+        if not (isinstance(out, GraphTensor) and builder.stages
+                and out.buffer == builder.stages[-1][0]):
+            # the result is not already the last stage's buffer:
+            # materialize it as the final stage (covers fused
+            # expressions, identity of an input, and plain Tensors
+            # produced by dsl helpers)
+            builder.stages.append(
+                (builder.buffer_name(len(builder.stages)), out))
+    else:
+        raise CompileError(
+            f"graph must return a Tensor or ScatterTensor, got "
+            f"{type(out).__name__}")
+
+    stage_sizes: Dict[str, int] = {}
+    stages: List[CompiledKernel] = []
+    sources: List[Dict[str, Tuple[str, object]]] = []
+    for idx, (buf, t) in enumerate(builder.stages):
+        sched = _stage_schedule(schedules, idx)
+        coarsen = sched.coarsen
+        if isinstance(t, ScatterTensor):
+            out_len, addr, val = t.out_len, t.addr, t.val
+        else:
+            out_len, addr, val = t.size, (lambda i: i), t.elem
+        if coarsen < 1 or out_len % coarsen:
+            raise CompileError(
+                f"stage {idx}: coarsen={coarsen} must divide the stage "
+                f"output length {out_len}")
+        stores = []
+        item = Item()
+        for c in range(coarsen):
+            ie = opt.add(opt.mul(item, coarsen), c)
+            stores.append((addr(ie), val(ie)))
+        reads = _load_names(stores)
+        arrays: Dict[str, int] = {}
+        srcs: Dict[str, Tuple[str, object]] = {}
+        for p in params:                       # inputs in signature order
+            if p in reads:
+                arrays[p] = sizes[p]
+                srcs[p] = ("input", p)
+        for j in range(idx):                   # then stage feeds by index
+            bn = builder.stages[j][0]
+            if bn in reads:
+                arrays[bn] = stage_sizes[bn]
+                srcs[bn] = ("stage", j)
+        unknown = reads - set(arrays)
+        if unknown:
+            raise CompileError(
+                f"stage {idx} reads unknown arrays {sorted(unknown)}")
+        kernel = Kernel(name=f"{gname}_s{idx}", arrays=arrays,
+                        out_len=out_len, n_items=out_len // coarsen,
+                        stores=stores)
+        stages.append(lower_kernel(kernel, sched))
+        sources.append(srcs)
+        stage_sizes[buf] = out_len
+    if isinstance(schedules, dict):
+        bad = [k for k in schedules if not 0 <= k < len(stages)]
+        if bad:
+            raise CompileError(f"schedules for nonexistent stages {bad} "
+                               f"(program has {len(stages)})")
+    return Program(gname, stages, sources, sizes)

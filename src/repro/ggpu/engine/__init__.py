@@ -24,7 +24,8 @@ from repro.ggpu.engine.config import GGPUConfig, ScalarConfig
 from repro.ggpu.engine.memsys import (MEMSYS_REGISTRY, BankedPerCUCache,
                                       CacheResult, MemorySystem, SharedCache,
                                       get_memsys)
-from repro.ggpu.engine.stepper import (KernelLaunchError, LaunchHandle,
+from repro.ggpu.engine.stepper import (BlockPatch, KernelLaunchError,
+                                       LaunchHandle,
                                        MachineState, cohort_rows,
                                        launch_shards,
                                        run_kernel, run_kernel_async,
@@ -35,7 +36,7 @@ from repro.ggpu.engine.stepper import (KernelLaunchError, LaunchHandle,
 
 __all__ = [
     "GGPUConfig", "ScalarConfig", "MachineState", "KernelLaunchError",
-    "LaunchHandle", "cohort_rows", "launch_shards",
+    "LaunchHandle", "BlockPatch", "cohort_rows", "launch_shards",
     "run_kernel", "run_kernel_batch", "run_kernel_cohort",
     "run_kernel_async", "run_kernel_batch_async", "run_kernel_cohort_async",
     "exec_alu", "select_alu", "branch_taken",

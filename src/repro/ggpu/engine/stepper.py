@@ -423,6 +423,102 @@ def _info(cycles: int, stats, steps: int, cfg: GGPUConfig) -> dict:
 Region = Optional[Tuple[int, int]]
 
 
+# -- device-resident chaining (patches) --------------------------------------
+#
+# A *patch* overwrites a region of a launch's staged memory with a device
+# array — typically another launch's ``device_mem``/``device_mem_block``
+# output — so a consumer kernel reads its producer's result without any
+# host transfer. Patches are applied to the freshly staged buffer BEFORE
+# the jitted stepper consumes (and donates) it, so they change neither the
+# compiled envelope nor the donation discipline. Two forms:
+#
+#   * per-launch: a sequence with one entry per launch, each ``None`` or a
+#     list of ``(dst_lo, dst_hi, src_array)`` tuples;
+#   * ``BlockPatch(lo, hi, block)``: one uniform region for every real
+#     launch of the chunk, ``block`` row ``j`` feeding launch ``j`` — a
+#     single fused device op, the chunk-to-chunk fast path.
+
+
+class BlockPatch(NamedTuple):
+    """One uniform staged-memory patch across all ``B`` real launches of a
+    chunk: ``block`` is ``(B, hi - lo)``; row ``j`` overwrites launch
+    ``j``'s words ``[lo, hi)``."""
+    lo: int
+    hi: int
+    block: jax.Array
+
+
+def _check_patches(patches, B: int, sizes: Sequence[int]):
+    """Validate patch bounds against each launch's own memory size."""
+    if isinstance(patches, BlockPatch):
+        lo, hi, block = patches
+        if not all(0 <= lo <= hi <= s for s in sizes[:B]):
+            raise ValueError(f"block patch [{lo}, {hi}) outside a launch's "
+                             f"memory image (sizes {list(sizes[:B])})")
+        if tuple(block.shape) != (B, hi - lo):
+            raise ValueError(f"block patch expects shape {(B, hi - lo)}, "
+                             f"got {tuple(block.shape)}")
+        return
+    patches = list(patches)
+    if len(patches) != B:
+        raise ValueError(f"patches has {len(patches)} entries for "
+                         f"{B} launches")
+    for plist, size in zip(patches, sizes):
+        for lo, hi, src in (plist or ()):
+            if not (0 <= lo <= hi <= size):
+                raise ValueError(f"patch [{lo}, {hi}) outside memory "
+                                 f"image [0, {size})")
+            if np.shape(src) != (hi - lo,):
+                raise ValueError(f"patch [{lo}, {hi}) expects "
+                                 f"{hi - lo} words, got {np.shape(src)}")
+
+
+@functools.partial(jax.jit, static_argnames=("lo", "hi"),
+                   donate_argnums=(0,))
+def _patch_rows_block(body, block, lo, hi):
+    """Jitted ``BlockPatch`` application to a row-per-launch staging
+    buffer: one compiled dispatch (donating the staging buffer) instead
+    of a handful of eager ops — the patch cost is fixed per chunk, so it
+    must not scale the pipelined path's dispatch overhead."""
+    return body.at[:block.shape[0], lo:hi].set(block)
+
+
+@functools.partial(jax.jit, static_argnames=("msize", "lo", "hi"),
+                   donate_argnums=(0,))
+def _patch_flat_block(staged, block, msize, lo, hi):
+    """Jitted ``BlockPatch`` application to a flat cohort/single staging
+    buffer (reshape + patch + reflatten fused into one dispatch)."""
+    rows = (staged.shape[0] - 1) // msize
+    body = staged[:rows * msize].reshape(rows, msize)
+    body = body.at[:block.shape[0], lo:hi].set(block)
+    return jnp.concatenate([body.reshape(-1), staged[rows * msize:]])
+
+
+def _patch_rows(body: jax.Array, patches) -> jax.Array:
+    """Apply patches to a row-per-launch view of the staged memory."""
+    if isinstance(patches, BlockPatch):
+        lo, hi, block = patches
+        return _patch_rows_block(body, block, lo=lo, hi=hi)
+    for i, plist in enumerate(patches):
+        for lo, hi, src in (plist or ()):
+            body = body.at[i, lo:hi].set(src)
+    return body
+
+
+def _patch_flat(staged: jax.Array, msize: int, patches) -> jax.Array:
+    """Patch a flat ``(rows*msize + 1,)`` cohort/single staging buffer.
+    Padding rows (copies of the first image) stay unpatched — they are
+    sliced away at resolution and each launch is isolated, so they are
+    never observable."""
+    if isinstance(patches, BlockPatch):
+        lo, hi, block = patches
+        return _patch_flat_block(staged, block, msize=msize, lo=lo, hi=hi)
+    rows = (staged.shape[0] - 1) // msize
+    body = staged[:rows * msize].reshape(rows, msize)
+    body = _patch_rows(body, patches)
+    return jnp.concatenate([body.reshape(-1), staged[rows * msize:]])
+
+
 @functools.partial(jax.jit, static_argnames=("B", "msize", "lo", "hi"))
 def _slice_block(mem, B, msize, lo, hi):
     """All launches' [lo, hi) regions of a flat cohort/single memory as one
@@ -618,6 +714,44 @@ class LaunchHandle:
         row = self._mem_full[i]
         return row[:self._n_keep[i]] if self._n_keep is not None else row
 
+    # -- device-resident access (no host transfer) ---------------------------
+
+    def device_mem(self, i: int = 0,
+                   region: Optional[Tuple[int, int]] = None) -> jax.Array:
+        """Launch ``i``'s final-memory ``[lo, hi)`` slice as a
+        device-resident array (default: the full image). Never blocks and
+        never touches the host — this is the producer side of the
+        device-resident chaining protocol: feed the result straight into a
+        consumer launch's ``patches``. The returned array only *reads*
+        the final memory (donation is unaffected), and XLA sequences it
+        after the producing dispatch, so no explicit wait is needed."""
+        if region is None:
+            size = (self._n_keep[i] if self._n_keep is not None
+                    else self._msize)
+            region = (0, size)
+        lo, hi = region
+        if self._kind == "batch":
+            return self._final.mem[i, lo:hi]
+        if self._kind == "shard-cohort":
+            b_local = (self._final.mem.shape[1] - 1) // self._msize
+            shard, slot = divmod(i, b_local)
+            base = slot * self._msize
+            return self._final.mem[shard, base + lo:base + hi]
+        base = i * self._msize
+        return self._final.mem[base + lo:base + hi]
+
+    def device_mem_block(self, lo: int, hi: int) -> jax.Array:
+        """All ``B`` launches' ``[lo, hi)`` slices as one device-resident
+        ``(B, hi - lo)`` array — one fused device op per chunk, the fast
+        path for feeding a whole producer chunk into a consumer chunk's
+        ``BlockPatch``. Never blocks, never touches the host."""
+        if self._kind == "batch":
+            return _slice_batch(self._final.mem, lo, hi)[:self._B]
+        if self._kind == "shard-cohort":
+            return _slice_rows(self._final.mem, self._B, self._msize,
+                               lo, hi)
+        return _slice_block(self._final.mem, self._B, self._msize, lo, hi)
+
     def results(self) -> List[Tuple[np.ndarray, dict]]:
         """All launches as (mem, info) pairs — exactly what the sync entry
         point returns."""
@@ -640,13 +774,22 @@ def _stage(mems: Sequence[np.ndarray]) -> jax.Array:
 
 def run_kernel_async(prog: np.ndarray, mem0: np.ndarray, n_items: int,
                      cfg: GGPUConfig, *, out_region: Region = None,
-                     legacy: bool = False) -> LaunchHandle:
+                     patches=None, legacy: bool = False) -> LaunchHandle:
     """Dispatch a single launch asynchronously; returns a ``LaunchHandle``
     while the device still runs. ``out_region=(lo, hi)`` limits the
-    eventual memory download to that slice of the final image."""
+    eventual memory download to that slice of the final image. ``patches``
+    optionally overwrites regions of the staged memory with device arrays
+    before dispatch (a flat list of ``(lo, hi, src)`` — the single-launch
+    form of the chunk-level patch protocol above)."""
     prog = np.asarray(prog, np.int32)
     mem0 = np.asarray(mem0, np.int32)
     staged = _stage([mem0])
+    if patches is not None:
+        msize = mem0.shape[0]
+        per_launch = (patches if isinstance(patches, BlockPatch)
+                      else [list(patches)])
+        _check_patches(per_launch, 1, [msize])
+        staged = _patch_flat(staged, msize, per_launch)
     final = _run_single(
         jnp.asarray(prog), staged,
         jnp.asarray(int(n_items), jnp.int32), cfg,
@@ -671,13 +814,16 @@ def run_kernel(prog: np.ndarray, mem0: np.ndarray, n_items: int,
 def run_kernel_cohort_async(prog: np.ndarray, mems: Sequence[np.ndarray],
                             n_items: int, cfg: GGPUConfig, *,
                             out_regions: Optional[Sequence[Region]] = None,
-                            mesh=None) -> LaunchHandle:
+                            patches=None, mesh=None) -> LaunchHandle:
     """Dispatch B same-kernel launches as one folded stepper call,
     asynchronously. ``out_regions`` optionally declares one download slice
     per launch (``None`` entries download that launch's full image).
-    ``mesh`` shards the launch axis across the mesh's data-parallel
-    devices (see module doc); a 1-extent mesh falls back to the
-    single-device path."""
+    ``patches`` optionally overwrites regions of the staged memory with
+    device arrays before dispatch — a ``BlockPatch`` or one
+    ``[(lo, hi, src), ...]`` list per launch (see the patch protocol
+    above). ``mesh`` shards the launch axis across the mesh's
+    data-parallel devices (see module doc); a 1-extent mesh falls back to
+    the single-device path."""
     prog = np.asarray(prog, np.int32)
     mems = [np.asarray(m, np.int32) for m in mems]
     if not mems:
@@ -686,12 +832,16 @@ def run_kernel_cohort_async(prog: np.ndarray, mems: Sequence[np.ndarray],
     if any(m.shape[0] != msize for m in mems):
         raise ValueError("cohort memory images must share one shape")
     B = len(mems)
+    if patches is not None:
+        _check_patches(patches, B, [msize] * B)
     shards = launch_shards(mesh)
     if shards > 1 and B > 1:
         return _dispatch_cohort_sharded(prog, mems, n_items, cfg, mesh,
-                                        shards, out_regions)
+                                        shards, out_regions, patches)
     rows = cohort_rows(B)
     staged = _stage(mems + [mems[0]] * (rows - B))
+    if patches is not None:
+        staged = _patch_flat(staged, msize, patches)
     final = _run_cohort(
         jnp.asarray(prog), staged,
         jnp.asarray(int(n_items), jnp.int32), cfg, rows,
@@ -702,7 +852,7 @@ def run_kernel_cohort_async(prog: np.ndarray, mems: Sequence[np.ndarray],
 
 
 def _dispatch_cohort_sharded(prog, mems, n_items, cfg, mesh, shards,
-                             out_regions) -> LaunchHandle:
+                             out_regions, patches=None) -> LaunchHandle:
     """Shard a cohort's launch axis over ``mesh``: pad B up to the
     ``cohort_rows`` bucket with copies of the first image (same kernel,
     same halt behavior — sliced away at resolution), stage one memory row
@@ -717,6 +867,16 @@ def _dispatch_cohort_sharded(prog, mems, n_items, cfg, mesh, shards,
                        + [np.zeros(1, np.int32)])
         for s in range(shards)])
     staged = jax.device_put(rows, _launch_sharding(mesh, 2))
+    if patches is not None:
+        # patch the element-major row view, then restore the per-shard
+        # row layout + sharding (the resulting reshard is what moves a
+        # producer's output to its consumer's shard — still no host hop)
+        body = staged[:, :b_local * msize].reshape(n_rows, msize)
+        body = _patch_rows(body, patches)
+        staged = jax.device_put(
+            jnp.concatenate([body.reshape(shards, b_local * msize),
+                             staged[:, b_local * msize:]], axis=1),
+            _launch_sharding(mesh, 2))
     final = _sharded_cohort_fn(
         cfg, b_local, _n_wavefronts(int(n_items), cfg),
         int(prog.shape[0]), msize, _static_ops(prog), mesh)(
@@ -740,9 +900,12 @@ def run_kernel_batch_async(progs: Sequence[np.ndarray],
                            mems: Sequence[np.ndarray],
                            n_items: Sequence[int], cfg: GGPUConfig, *,
                            out_regions: Optional[Sequence[Region]] = None,
-                           mesh=None) -> LaunchHandle:
+                           patches=None, mesh=None) -> LaunchHandle:
     """Dispatch N heterogeneous launches as one vmapped stepper call,
-    asynchronously (padding exactly as ``run_kernel_batch``). ``mesh``
+    asynchronously (padding exactly as ``run_kernel_batch``). ``patches``
+    optionally overwrites regions of the staged memory with device arrays
+    before dispatch (see the patch protocol above; bounds check against
+    each launch's own memory size, not the padded envelope). ``mesh``
     shards the vmapped launch axis across the mesh's data-parallel
     devices, padding N up to the shard count with trivial 1-item HALT
     fillers (invisible at resolution); a 1-extent mesh falls back to the
@@ -755,6 +918,8 @@ def run_kernel_batch_async(progs: Sequence[np.ndarray],
     mems = [np.asarray(m, np.int32) for m in mems]
     n_items = [int(n) for n in n_items]
     B = len(progs)
+    if patches is not None:
+        _check_patches(patches, B, [m.shape[0] for m in mems])
     shards = launch_shards(mesh)
     pad = -B % shards if shards > 1 and B > 1 else 0
     if pad:
@@ -775,10 +940,15 @@ def run_kernel_batch_async(progs: Sequence[np.ndarray],
     if shards > 1 and B > 1:
         sharding = _launch_sharding(mesh, 2)
         staged = jax.device_put(mem_b, sharding)
+        if patches is not None:
+            # batch rows are already row-per-launch; patch then reshard
+            staged = jax.device_put(_patch_rows(staged, patches), sharding)
         final = _sharded_batch_fn(cfg, W, P, M, ops, mesh)(
             jnp.asarray(prog_b), staged, n_arr, msz_arr)
     else:
         staged = jnp.asarray(mem_b)
+        if patches is not None:
+            staged = _patch_rows(staged, patches)
         final = _run_batch(jnp.asarray(prog_b), staged, n_arr, msz_arr,
                            cfg, W, P, ops)
     return LaunchHandle(final, cfg, "batch", B, M,

@@ -11,19 +11,28 @@ modules are the API for new code.
 from repro.serve.executors import (Executor, ExecutorStats, PendingChunk,
                                    get_executor, sim_key)
 from repro.serve.fleet import Fleet, FleetDevice, pinned_makespan
+from repro.serve.graphs import (GraphTickets, extract_outputs,
+                                run_chains_host_staged, run_program,
+                                run_program_host_staged,
+                                run_programs_host_staged, submit_program,
+                                submit_programs)
 from repro.serve.llm import Engine, EngineConfig
 from repro.serve.loadgen import (LoadResult, bursty_arrivals,
                                  poisson_arrivals, replay)
-from repro.serve.request import KernelLaunch, Request, Result
-from repro.serve.scheduler import (AdmissionError, Chunk, LaunchQueue,
-                                   Quarantined, Scheduler, plan_chunks,
-                                   plan_waves, wavefronts)
+from repro.serve.request import Dep, KernelLaunch, Request, Result
+from repro.serve.scheduler import (AdmissionError, Chunk, DependencyError,
+                                   LaunchQueue, Quarantined, Scheduler,
+                                   plan_chunks, plan_waves, wavefronts)
 
 __all__ = [
-    "AdmissionError", "Chunk", "Engine", "EngineConfig", "Executor",
-    "ExecutorStats", "Fleet", "FleetDevice", "KernelLaunch", "LaunchQueue",
-    "LoadResult", "PendingChunk", "Quarantined", "Request", "Result",
-    "Scheduler", "bursty_arrivals", "get_executor",
+    "AdmissionError", "Chunk", "Dep", "DependencyError", "Engine",
+    "EngineConfig", "Executor", "ExecutorStats", "Fleet", "FleetDevice",
+    "GraphTickets", "KernelLaunch", "LaunchQueue", "LoadResult",
+    "PendingChunk", "Quarantined", "Request", "Result", "Scheduler",
+    "bursty_arrivals", "extract_outputs", "get_executor",
     "pinned_makespan", "plan_chunks", "plan_waves", "poisson_arrivals",
-    "replay", "sim_key", "wavefronts",
+    "replay", "run_chains_host_staged", "run_program",
+    "run_program_host_staged",
+    "run_programs_host_staged", "sim_key", "submit_program",
+    "submit_programs", "wavefronts",
 ]

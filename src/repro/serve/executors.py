@@ -53,8 +53,8 @@ from typing import Dict, List, Optional, Sequence
 
 import jax
 
-from repro.ggpu.engine import (GGPUConfig, LaunchHandle, cohort_rows,
-                               launch_shards)
+from repro.ggpu.engine import (BlockPatch, GGPUConfig, LaunchHandle,
+                               cohort_rows, launch_shards)
 from repro.ggpu.engine import (run_kernel_async, run_kernel_batch_async,
                                run_kernel_cohort_async)
 from repro.ggpu.engine.stepper import _n_wavefronts
@@ -171,9 +171,15 @@ class Executor:
 
     # -- execution ----------------------------------------------------------
 
-    def submit(self, kind: str, reqs: Sequence[Request]) -> PendingChunk:
+    def submit(self, kind: str, reqs: Sequence[Request],
+               patches=None) -> PendingChunk:
         """Stage and dispatch one planned chunk asynchronously; returns
-        while the device still runs. Pair with ``collect``."""
+        while the device still runs. Pair with ``collect``. ``patches``
+        optionally overwrites regions of the chunk's staged memory with
+        device arrays before dispatch — a ``repro.ggpu.engine.BlockPatch``
+        or one ``[(lo, hi, src), ...]`` list per launch — the
+        device-resident chaining path a dependency-aware scheduler uses to
+        feed a producer's output into a consumer with no host transfer."""
         reqs = list(reqs)
         if len(reqs) == 1:
             kind = "single"          # a degenerate chunk needs no folding
@@ -193,16 +199,25 @@ class Executor:
             if kind == "cohort":
                 h = run_kernel_cohort_async(
                     reqs[0].prog, [r.mem0 for r in reqs], reqs[0].n_items,
-                    cfg, out_regions=regions, mesh=self.mesh)
+                    cfg, out_regions=regions, patches=patches,
+                    mesh=self.mesh)
             elif kind == "batch":
                 h = run_kernel_batch_async(
                     [r.prog for r in reqs], [r.mem0 for r in reqs],
                     [r.n_items for r in reqs], cfg, out_regions=regions,
-                    mesh=self.mesh)
+                    patches=patches, mesh=self.mesh)
             else:
+                # normalize the chunk-level patch forms down to the
+                # single-launch flat list the engine entry point takes
+                single = None
+                if isinstance(patches, BlockPatch):
+                    single = [(patches.lo, patches.hi, patches.block[0])]
+                elif patches is not None:
+                    single = patches[0]
                 h = run_kernel_async(
                     reqs[0].prog, reqs[0].mem0, reqs[0].n_items, cfg,
-                    out_region=regions[0] if regions else None)
+                    out_region=regions[0] if regions else None,
+                    patches=single)
         return PendingChunk(h, kind, reqs, env, traced)
 
     def collect(self, pending: PendingChunk) -> List[Result]:

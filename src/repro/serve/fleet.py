@@ -22,6 +22,20 @@ parallel); ``pinned_makespan`` prices the whole trace on one config for
 comparison. ``benchmarks/serve_bench.py`` records the routed-vs-pinned
 comparison in ``BENCH_serve.json``.
 
+**Kernel graphs.** A request carrying ``deps`` is not routed freely: its
+producers' device-resident outputs feed it with no host hop, so it must
+land on the device already holding every producer. The router looks the
+producers up in its placement map, requires them to agree on one device
+(a graph that spans devices would need a host round-trip — submit it to
+one device or don't use deps), and translates the fleet-level producer
+tickets into that device scheduler's local tickets before handing the
+request down. The learned service-time model keys on *(kernel,
+schedule)* — ``Request.schedule`` carries the lowering-schedule label —
+because a tuned and a default lowering of one kernel are different
+programs with different true cycle counts; folding them under one key
+would let a fast tuned variant mask a slow default one (or vice versa)
+and skew every later placement of either.
+
 **Physical placement.** Passing a ``mesh`` (``make_launch_mesh``) binds
 each simulated device to a contiguous slice of the mesh's physical JAX
 devices: a slice of one pins that scheduler's dispatches to that device
@@ -106,12 +120,15 @@ class Fleet:
         if len(set(names)) != len(names):
             raise ValueError(f"fleet device names must be unique: {names}"
                              " (names key the routing and result maps)")
-        # learned service times: (device name, kernel key) -> time_us
-        self._learned: Dict[Tuple[str, tuple], float] = {}
+        # learned service times: (device name, kernel key, schedule
+        # label) -> time_us — the schedule is part of the identity
+        # (module doc: a tuned lowering is a different program)
+        self._learned: Dict[Tuple[str, tuple, str], float] = {}
         self.placement: Dict[int, str] = {}     # fleet ticket -> device name
         self._next_ticket = 0
         self._tickets: Dict[Tuple[str, int], int] = {}  # (dev, local) -> fleet
-        self._kernel_keys: Dict[int, tuple] = {}        # fleet -> kernel key
+        self._local: Dict[int, int] = {}                # fleet -> local
+        self._kernel_keys: Dict[int, tuple] = {}  # fleet -> (kernel, sched)
         self._eta_charged: Dict[int, float] = {}        # fleet -> estimate
         self.quarantined: Dict[int, Quarantined] = {}   # by fleet ticket
 
@@ -122,7 +139,8 @@ class Fleet:
         when this device has served this kernel, else an occupancy proxy —
         each of the kernel's ``W`` wavefronts issues its program once over
         ``n_cus``-way CU parallelism at the device's clock."""
-        learned = self._learned.get((dev.name, req.kernel_key()))
+        learned = self._learned.get(
+            (dev.name, req.kernel_key(), req.schedule))
         if learned is not None:
             return learned
         W = wavefronts(req.n_items, dev.cfg)
@@ -156,10 +174,37 @@ class Fleet:
         return self.submit_request(
             Request(prog, mem0, n_items, tag, priority, deadline_us))
 
+    def _dep_device(self, req: Request) -> FleetDevice:
+        """The one device holding every producer of ``req`` (module doc:
+        graph stages co-locate to preserve device residency)."""
+        names = set()
+        for d in req.deps:
+            name = self.placement.get(d.producer)
+            if name is None:
+                raise ValueError(
+                    f"dep producer ticket {d.producer} is unknown to "
+                    f"this fleet")
+            names.add(name)
+        if len(names) > 1:
+            raise ValueError(
+                f"graph stages must co-locate on one device to stay "
+                f"device-resident; producers span {sorted(names)}")
+        (name,) = names
+        return next(d for d in self.devices if d.name == name)
+
     def submit_request(self, req: Request) -> int:
         """Route a prebuilt ``Request`` (the ``loadgen.replay`` target
-        protocol, shared with ``Scheduler.submit_request``)."""
-        dev = min(self.devices, key=lambda d: self.finish_us(d, req))
+        protocol, shared with ``Scheduler.submit_request``). A request
+        with ``deps`` is pinned to its producers' device, with the
+        fleet-level producer tickets rewritten to that scheduler's local
+        tickets on the way down."""
+        if req.deps:
+            dev = self._dep_device(req)
+            req.deps = tuple(
+                dataclasses.replace(d, producer=self._local[d.producer])
+                for d in req.deps)
+        else:
+            dev = min(self.devices, key=lambda d: self.finish_us(d, req))
         est = self.estimate_us(dev, req) * self._shard_scale(dev)
         local = dev.scheduler.submit_request(req)
         dev.eta_us += est
@@ -167,7 +212,8 @@ class Fleet:
         self._next_ticket += 1
         self.placement[ticket] = dev.name
         self._tickets[(dev.name, local)] = ticket
-        self._kernel_keys[ticket] = req.kernel_key()
+        self._local[ticket] = local
+        self._kernel_keys[ticket] = (req.kernel_key(), req.schedule)
         self._eta_charged[ticket] = est
         return ticket
 
@@ -194,7 +240,8 @@ class Fleet:
                 res.info["device"] = dev.name
                 ticket = self._tickets[(dev.name, local)]
                 res.info["ticket"] = ticket
-                self._learned[(dev.name, self._kernel_keys[ticket])] = t_us
+                kk, sched = self._kernel_keys[ticket]
+                self._learned[(dev.name, kk, sched)] = t_us
                 # reconcile the modeled backlog with the actual time
                 # (shard-discounted the same way the submit charge was)
                 scaled = t_us * self._shard_scale(dev)

@@ -22,6 +22,22 @@ path then downloads only that slice (``Result.mem`` holds it), and
 ``(0, 0)`` means cycles-only — no memory transfer at all (how the DSE
 evaluator collects). Without a region, ``Result.mem`` is the full image,
 bit-exact with direct ``run_kernel``.
+
+**Dependency edges.** ``deps`` declares that this request consumes the
+output of earlier requests: each ``Dep(producer, dst, src)`` names a
+producer *ticket*, the half-open region ``dst`` of *this* request's
+memory image the producer's output lands in, and optionally the region
+``src`` of the producer's final image to read (default: the producer's
+declared ``out_region``). A dependency-aware scheduler dispatches the
+consumer only once every producer has been dispatched, and patches the
+producer's device-resident output directly into the consumer's staged
+memory — the words at ``dst`` in ``mem0`` are placeholders (conventionally
+zeros) that never travel through the host. Producers that exist only to
+feed consumers declare ``out_region=(0, 0)`` so nothing is downloaded
+anywhere along the chain. ``schedule`` labels the lowering schedule the
+kernel was compiled with (``repro.compiler.Schedule.label()``); the fleet
+keys its learned service-time model on (kernel, schedule), since tuned
+and default lowerings of one kernel have different true cycle counts.
 """
 from __future__ import annotations
 
@@ -42,6 +58,17 @@ def _static_ops_cached(prog_bytes: bytes, width: int) -> tuple:
     return tuple(sorted({int(o) for o in prog[:, 0]}))
 
 
+@dataclasses.dataclass(frozen=True)
+class Dep:
+    """One dependency edge: this request's ``dst`` region is fed by
+    ``producer``'s final-memory ``src`` region (``None``: the producer's
+    declared ``out_region``, resolved at admission). Regions are
+    half-open ``(lo, hi)`` word slices and must have equal width."""
+    producer: int
+    dst: Tuple[int, int]
+    src: Optional[Tuple[int, int]] = None
+
+
 @dataclasses.dataclass
 class Request:
     """One queued G-GPU kernel launch with serving metadata."""
@@ -53,6 +80,8 @@ class Request:
     deadline_us: float = math.inf  # modeled-time deadline (EDF tie-break)
     ticket: int = -1             # assigned by the scheduler at submit
     out_region: Optional[Tuple[int, int]] = None  # download slice (lo, hi)
+    deps: Tuple[Dep, ...] = ()   # producer edges (see module doc)
+    schedule: str = ""           # lowering-schedule label ("" = unknown)
 
     def __post_init__(self):
         self.prog = np.asarray(self.prog, np.int32)
@@ -67,6 +96,18 @@ class Request:
                 raise ValueError(
                     f"out_region {self.out_region} outside memory image "
                     f"[0, {self.mem0.shape[0]})")
+        self.deps = tuple(self.deps)
+        for d in self.deps:
+            if not isinstance(d, Dep):
+                raise ValueError(f"deps must be Dep instances, got {d!r}")
+            lo, hi = d.dst
+            if not (0 <= lo <= hi <= self.mem0.shape[0]):
+                raise ValueError(
+                    f"dep dst {d.dst} outside memory image "
+                    f"[0, {self.mem0.shape[0]})")
+            if d.src is not None and d.src[1] - d.src[0] != hi - lo:
+                raise ValueError(
+                    f"dep src {d.src} and dst {d.dst} widths differ")
 
     def kernel_key(self) -> tuple:
         """Same-kernel identity: launches sharing this key fold into one

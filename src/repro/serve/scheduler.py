@@ -29,6 +29,24 @@ the pipeline depth. Results are bit-exact with the serial path at any
 depth; ``Fleet.drain`` uses the split API directly to dispatch to every
 device before collecting from any.
 
+The scheduler is **dependency-aware** (DESIGN.md §Kernel graphs): a
+request may declare ``deps`` edges naming producer tickets whose final
+memory feeds regions of its own image. Planning then works over the
+topological *ready set* — a request is ready once every producer has
+been **dispatched** (not collected: an in-flight producer feeds its
+consumers without a collect barrier; XLA sequences the reads). Ready
+consumers are dispatched with ``patches``: device-resident slices of
+their producers' final memory (``LaunchHandle.device_mem`` /
+``device_mem_block``) written into the consumer's staged buffer before
+its own dispatch — a producer→consumer edge costs zero host round-trips.
+A producer's handle stays **resident** (``_resident``) from its dispatch
+until every consumer has been collected, so survivor re-dispatch after a
+quarantine — and re-dispatch after an abandoned drain — can always
+rebuild its patches. When a producer is quarantined, its consumers are
+poisoned transitively: pending ones are quarantined immediately,
+in-flight ones at their collection (``DependencyError`` names the failed
+producer); their results are never returned.
+
 ``LaunchQueue`` remains the pre-package interface with its original
 strict semantics (whole-flush raise + restore on failure); see the class
 docstring. New code should use ``Scheduler``/``Fleet`` directly.
@@ -40,15 +58,21 @@ import math
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
-from repro.ggpu.engine import GGPUConfig, KernelLaunchError
+from repro.ggpu.engine import BlockPatch, GGPUConfig, KernelLaunchError
 from repro.serve.executors import Executor, PendingChunk
-from repro.serve.request import Request, Result
+from repro.serve.request import Dep, Request, Result
 
 
 class AdmissionError(RuntimeError):
     """The scheduler's pending set is full (``max_pending`` reached)."""
+
+
+class DependencyError(KernelLaunchError):
+    """A launch was quarantined because a producer it depends on was —
+    its input region would have been the failed producer's garbage."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,6 +183,12 @@ class Scheduler:
         self._completed: List[Result] = []       # buffered across failures
         self._inflight: Deque[PendingChunk] = deque()
         self._inflight_tickets: set = set()
+        # dependency state (module doc): producer -> uncollected consumers,
+        # producer -> (dispatched chunk, index) while any consumer waits,
+        # in-flight consumer -> its quarantined producer
+        self._dep_waiters: Dict[int, set] = {}
+        self._resident: Dict[int, Tuple[PendingChunk, int]] = {}
+        self._poisoned: Dict[int, int] = {}
 
     def __len__(self) -> int:
         return len(self._pending)
@@ -183,13 +213,16 @@ class Scheduler:
     def submit(self, prog: np.ndarray, mem0: np.ndarray, n_items: int,
                tag: str = "", priority: int = 0,
                deadline_us: float = math.inf,
-               out_region: Optional[Tuple[int, int]] = None) -> int:
+               out_region: Optional[Tuple[int, int]] = None,
+               deps: Sequence[Dep] = ()) -> int:
         """Admit a launch; returns its (monotonic) ticket. ``out_region``
         optionally declares the slice of the final memory image the caller
-        wants back (``(0, 0)``: cycles-only, no download)."""
+        wants back (``(0, 0)``: cycles-only, no download); ``deps``
+        declares producer edges (module doc)."""
         return self.submit_request(Request(prog, mem0, n_items, tag,
                                            priority, deadline_us,
-                                           out_region=out_region))
+                                           out_region=out_region,
+                                           deps=tuple(deps)))
 
     def submit_request(self, req: Request) -> int:
         if self.max_pending is not None \
@@ -197,48 +230,175 @@ class Scheduler:
             raise AdmissionError(
                 f"scheduler full: {len(self._pending)} pending "
                 f"(max_pending={self.max_pending})")
+        if req.deps:
+            req.deps = tuple(self._resolve_dep(d) for d in req.deps)
         req.ticket = self._next_ticket
         self._next_ticket += 1
         self._pending[req.ticket] = req
+        for d in req.deps:
+            self._dep_waiters.setdefault(d.producer, set()).add(req.ticket)
+            if d.producer in self._inflight_tickets \
+                    and d.producer not in self._resident:
+                # producer dispatched before it had waiters: register its
+                # residency now so this consumer can be planned at once
+                for chunk in self._inflight:
+                    for idx, r in enumerate(chunk.reqs):
+                        if r.ticket == d.producer:
+                            self._resident[d.producer] = (chunk, idx)
         return req.ticket
 
+    def _resolve_dep(self, d: Dep) -> Dep:
+        """Validate one edge at admission (malformed edges bounce the
+        submit, they never poison a drain) and pin its ``src`` region:
+        explicit > the producer's non-empty ``out_region`` > the full
+        image when the producer declared no region at all."""
+        producer = self._pending.get(d.producer)
+        if producer is None and d.producer in self._resident:
+            chunk, idx = self._resident[d.producer]
+            producer = chunk.reqs[idx]
+        if producer is None:
+            state = ("quarantined" if d.producer in self.quarantined
+                     else "unknown or already collected")
+            raise ValueError(f"dep producer ticket {d.producer} is {state}")
+        src = d.src
+        if src is None:
+            if producer.out_region is None:
+                src = (0, producer.mem0.shape[0])
+            elif producer.out_region[1] > producer.out_region[0]:
+                src = producer.out_region
+            else:
+                raise ValueError(
+                    f"dep on producer ticket {d.producer} needs an explicit "
+                    "src: the producer declares the empty out_region (0, 0)")
+        if not (0 <= src[0] <= src[1] <= producer.mem0.shape[0]):
+            raise ValueError(f"dep src {src} outside producer ticket "
+                             f"{d.producer}'s memory image "
+                             f"[0, {producer.mem0.shape[0]})")
+        if src[1] - src[0] != d.dst[1] - d.dst[0]:
+            raise ValueError(f"dep src {src} and dst {d.dst} widths differ")
+        return Dep(d.producer, d.dst, src)
+
     def cancel(self, ticket: int) -> Request:
-        """Remove a still-pending request by ticket."""
-        return self._pending.pop(ticket)
+        """Remove a still-pending request by ticket. A request that is in
+        flight or has consumers waiting on it cannot be cancelled."""
+        if ticket in self._inflight_tickets:
+            raise ValueError(f"ticket {ticket} is in flight")
+        if self._dep_waiters.get(ticket):
+            raise ValueError(f"ticket {ticket} has waiting consumers")
+        req = self._pending.pop(ticket)
+        self._release_deps(req)
+        return req
 
     # -- drain --------------------------------------------------------------
 
+    def _ready(self) -> List[Request]:
+        """The planner's input: pending, not in flight, every producer
+        already dispatched (resident) — the topological ready set."""
+        return [r for r in self._pending.values()
+                if r.ticket not in self._inflight_tickets
+                and all(d.producer in self._resident for d in r.deps)]
+
     def dispatch(self, budget: Optional[int] = None) -> int:
-        """Plan chunks over the pending-but-not-in-flight set and dispatch
-        them asynchronously until ``budget`` launches have been staged
-        (``None``: everything); returns how many launches were dispatched.
-        Dispatch returns while the device still runs — staging/padding of
-        chunk *k+1* overlaps chunk *k*'s compute. When more than
-        ``max_inflight`` chunks are outstanding the oldest is collected
-        (into the completed buffer) to bound the pipeline."""
-        items = [r for r in self._pending.values()
-                 if r.ticket not in self._inflight_tickets]
-        chunks = plan_chunks(items, self.cfg, self.plan_batch)
+        """Plan chunks over the ready set (pending, not in flight, every
+        producer dispatched) and dispatch them asynchronously until
+        ``budget`` launches have been staged (``None``: everything);
+        returns how many launches were dispatched. Dispatch returns while
+        the device still runs — staging/padding of chunk *k+1* overlaps
+        chunk *k*'s compute. When more than ``max_inflight`` chunks are
+        outstanding the oldest is collected (into the completed buffer) to
+        bound the pipeline. Dispatching a producer makes its consumers
+        ready, so planning repeats until no progress — a whole DAG drains
+        in one call, producers feeding in-flight consumers with no collect
+        barrier in between."""
         taken = 0
-        for chunk in chunks:
-            if budget is not None and taken >= budget:
+        while budget is None or taken < budget:
+            items = self._ready()
+            chunks = plan_chunks(items, self.cfg, self.plan_batch)
+            progress = False
+            for chunk in chunks:
+                if budget is not None and taken >= budget:
+                    break
+                try:
+                    # shrink the window BEFORE dispatching so
+                    # ``max_inflight`` bounds simultaneous in-flight
+                    # chunks: 1 = strictly serial (collect each chunk
+                    # before the next is staged — the sync reference),
+                    # N = an N-deep dispatch-ahead pipeline
+                    while len(self._inflight) >= self.max_inflight:
+                        self._collect_oldest()
+                    # the window collection above may have quarantined a
+                    # planned-but-undispatched consumer (cascade): keep
+                    # only members that are still live
+                    reqs = [r for r in (items[i] for i in chunk.members)
+                            if r.ticket in self._pending
+                            and r.ticket not in self._inflight_tickets]
+                    if not reqs:
+                        continue
+                    taken += len(reqs)
+                    pending = self.executor.submit(
+                        chunk.kind, reqs,
+                        self._chunk_patches(reqs))
+                    self._inflight.append(pending)
+                    self._inflight_tickets.update(r.ticket for r in reqs)
+                    self._note_dispatched(pending)
+                    progress = True
+                except BaseException:
+                    self._abandon_inflight()
+                    raise
+            if not progress:
                 break
-            reqs = [items[i] for i in chunk.members]
-            taken += len(reqs)
-            try:
-                # shrink the window BEFORE dispatching so ``max_inflight``
-                # bounds simultaneous in-flight chunks: 1 = strictly serial
-                # (collect each chunk before the next is staged — the sync
-                # reference), N = an N-deep dispatch-ahead pipeline
-                while len(self._inflight) >= self.max_inflight:
-                    self._collect_oldest()
-                pending = self.executor.submit(chunk.kind, reqs)
-                self._inflight.append(pending)
-                self._inflight_tickets.update(r.ticket for r in reqs)
-            except BaseException:
-                self._abandon_inflight()
-                raise
         return taken
+
+    def _note_dispatched(self, pending: PendingChunk) -> None:
+        """Record residency for dispatched requests that have consumers
+        waiting: the handle (and with it the device-side final memory)
+        stays reachable until every consumer has been collected."""
+        for idx, r in enumerate(pending.reqs):
+            if self._dep_waiters.get(r.ticket):
+                self._resident[r.ticket] = (pending, idx)
+
+    def _chunk_patches(self, reqs: Sequence[Request]):
+        """Build the device-resident patches for one planned chunk: the
+        fused ``BlockPatch`` when every member draws the same region from
+        producers co-located in one resident chunk (one device op feeds
+        the whole chunk), per-launch patch lists otherwise, ``None`` when
+        the chunk has no dependencies."""
+        if not any(r.deps for r in reqs):
+            return None
+        fused = self._fused_patch(reqs)
+        if fused is not None:
+            return fused
+        per = []
+        for r in reqs:
+            plist = []
+            for d in r.deps:
+                chunk, idx = self._resident[d.producer]
+                plist.append((d.dst[0], d.dst[1],
+                              chunk.handle.device_mem(idx, d.src)))
+            per.append(plist or None)
+        return per
+
+    def _fused_patch(self, reqs: Sequence[Request]):
+        """The chunk-to-chunk fast path: every member has exactly one dep,
+        all with identical (dst, src) regions, and every producer lives in
+        the same resident chunk — one fused slice of the producer chunk's
+        memory feeds the whole consumer chunk."""
+        if not all(len(r.deps) == 1 for r in reqs):
+            return None
+        d0 = reqs[0].deps[0]
+        if not all(r.deps[0].dst == d0.dst and r.deps[0].src == d0.src
+                   for r in reqs):
+            return None
+        entries = [self._resident[r.deps[0].producer] for r in reqs]
+        chunk0 = entries[0][0]
+        if any(e[0] is not chunk0 for e in entries):
+            return None
+        block = chunk0.handle.device_mem_block(*d0.src)
+        idxs = [e[1] for e in entries]
+        if idxs != list(range(len(chunk0.reqs))):
+            block = jnp.take(block, jnp.asarray(np.asarray(idxs, np.int32)),
+                             axis=0)
+        return BlockPatch(d0.dst[0], d0.dst[1], block)
 
     def collect(self) -> List[Result]:
         """Resolve every in-flight chunk (dispatch order) and return all
@@ -282,9 +442,24 @@ class Scheduler:
     def _abandon_inflight(self) -> None:
         """Drop in-flight chunks after an unexpected failure: their
         requests are still pending, so the next dispatch re-plans them —
-        no work is lost, nothing is double-served."""
+        no work is lost, nothing is double-served. Residency entries
+        pointing into the abandoned chunks are dropped with them (the
+        producers re-dispatch and re-register); entries for
+        already-collected producers survive, so abandoned consumers can
+        rebuild their patches on re-dispatch. In-flight consumers of a
+        quarantined producer go straight to quarantine — their producer's
+        output is gone for good."""
+        abandoned = {id(c) for c in self._inflight}
         self._inflight.clear()
         self._inflight_tickets.clear()
+        self._resident = {t: e for t, e in self._resident.items()
+                          if id(e[0]) not in abandoned}
+        poisoned, self._poisoned = self._poisoned, {}
+        for ticket, producer in poisoned.items():
+            req = self._pending.get(ticket)
+            if req is not None:
+                self._quarantine(req, DependencyError(
+                    f"producer ticket {producer} was quarantined"))
 
     def _collect_oldest(self) -> None:
         pending = self._inflight.popleft()
@@ -292,11 +467,46 @@ class Scheduler:
             self._inflight_tickets.discard(r.ticket)
         self._completed.extend(self._collect_quarantining(pending))
 
+    def _release_deps(self, req: Request) -> None:
+        """A consumer reached a terminal state: stop holding its
+        producers' handles resident once no consumer still waits."""
+        for d in req.deps:
+            waiters = self._dep_waiters.get(d.producer)
+            if waiters is None:
+                continue
+            waiters.discard(req.ticket)
+            if not waiters:
+                del self._dep_waiters[d.producer]
+                self._resident.pop(d.producer, None)
+
+    def _quarantine(self, req: Request,
+                    exc: KernelLaunchError) -> None:
+        """Isolate one launch and poison its consumers transitively:
+        pending consumers are quarantined right here, in-flight ones at
+        their own collection (their result is garbage — the patch read the
+        failed producer's memory)."""
+        self._pending.pop(req.ticket, None)
+        self.quarantined[req.ticket] = Quarantined(req, exc)
+        self._release_deps(req)
+        waiters = self._dep_waiters.pop(req.ticket, set())
+        self._resident.pop(req.ticket, None)
+        for ticket in waiters:
+            if ticket in self._poisoned:
+                continue
+            if ticket in self._inflight_tickets:
+                self._poisoned[ticket] = req.ticket
+            elif ticket in self._pending:
+                self._quarantine(self._pending[ticket], DependencyError(
+                    f"producer ticket {req.ticket} was quarantined"))
+
     def _collect_quarantining(self, pending: PendingChunk) -> List[Result]:
         """Collect one chunk; on failure isolate the blamed launch into
         ``quarantined`` and re-dispatch the survivors until the chunk
         completes. Survivor results stay bit-exact: cohort/batch folding
-        is per-launch exact at any membership."""
+        is per-launch exact at any membership, and survivors with
+        dependencies rebuild their patches from the still-resident
+        producer handles (a consumer in flight keeps its producers
+        resident, so the rebuild always finds them)."""
         out: List[Result] = []
         while True:
             reqs = pending.reqs
@@ -305,17 +515,25 @@ class Scheduler:
             except KernelLaunchError as exc:
                 bad = reqs[exc.index]
                 survivors = reqs[:exc.index] + reqs[exc.index + 1:]
-                del self._pending[bad.ticket]
-                self.quarantined[bad.ticket] = Quarantined(bad, exc)
+                self._poisoned.pop(bad.ticket, None)
+                self._quarantine(bad, exc)
                 if not survivors:
                     return out
-                pending = self.executor.submit(pending.kind, survivors)
+                pending = self.executor.submit(
+                    pending.kind, survivors, self._chunk_patches(survivors))
+                self._note_dispatched(pending)
                 continue
             for req, res in zip(reqs, results):
+                producer = self._poisoned.pop(req.ticket, None)
+                if producer is not None:
+                    self._quarantine(req, DependencyError(
+                        f"producer ticket {producer} was quarantined"))
+                    continue
                 res.info["ticket"] = req.ticket
                 if req.tag:
                     res.info["tag"] = req.tag
                 del self._pending[req.ticket]
+                self._release_deps(req)
                 out.append(res)
             return out
 

@@ -163,6 +163,71 @@ def test_serve_host_throughput_band(serve_base):
     assert check_artifacts(fresh, serve_base, host_tol=0.25)
 
 
+def test_serve_graph_gates(serve_base):
+    """The kernel-graph section: the committed baseline clears the
+    structural GRAPH_MIN_SPEEDUP gate (device-count independent — no
+    n_devices exemption like the async gate), and injected regressions
+    in speedup, bit-exactness, or cohort folding all fail."""
+    from benchmarks.serve_bench import GRAPH_MIN_SPEEDUP
+    g = serve_base["graph"]
+    assert g["speedup"] >= GRAPH_MIN_SPEEDUP
+    assert g["bit_exact"] is True
+    assert 0 < g["pipelined"]["dispatches"] <= len(g["stages"])
+    fresh = copy.deepcopy(serve_base)
+    fresh["graph"]["speedup"] = GRAPH_MIN_SPEEDUP - 0.1
+    fresh["n_devices"] = 1                       # gate binds regardless
+    violations = check_artifacts(fresh, serve_base)
+    assert any("graph.speedup" in v for v in violations), violations
+    fresh = copy.deepcopy(serve_base)
+    fresh["graph"]["bit_exact"] = False
+    violations = check_artifacts(fresh, serve_base)
+    assert any("graph.bit_exact" in v for v in violations), violations
+    fresh = copy.deepcopy(serve_base)
+    fresh["graph"]["pipelined"]["dispatches"] = \
+        serve_base["graph"]["instances"] * len(g["stages"])
+    violations = check_artifacts(fresh, serve_base)
+    assert any("dispatches" in v for v in violations), violations
+
+
+def test_serve_graph_partial_artifact(serve_base):
+    """A ``sections: ["graph"]`` artifact (benchmarks.run --graph) is
+    gated on its graph section only — the missing throughput/fleet/
+    latency sections must NOT produce violations — both via the marker
+    and via the explicit ``--section graph`` restriction."""
+    from benchmarks.serve_bench import GRAPH_MIN_SPEEDUP
+    partial = {"schema": serve_base["schema"], "sections": ["graph"],
+               "n_devices": 1,
+               "graph_speedup": serve_base["graph_speedup"],
+               "graph": copy.deepcopy(serve_base["graph"])}
+    assert check_artifacts(copy.deepcopy(partial), serve_base) == []
+    assert check_artifacts(copy.deepcopy(partial), serve_base,
+                           section="graph") == []
+    bad = copy.deepcopy(partial)
+    bad["graph"]["speedup"] = GRAPH_MIN_SPEEDUP - 0.1
+    violations = check_artifacts(bad, serve_base, section="graph")
+    assert any("graph.speedup" in v for v in violations), violations
+    assert check_artifacts(copy.deepcopy(partial), serve_base,
+                           section="mystery")
+
+
+def test_section_flag_cli(tmp_path, serve_base):
+    """``check_bench ... --section graph`` is what the graph-smoke job
+    runs: a partial artifact passes, an injected regression exits 1."""
+    from benchmarks.serve_bench import GRAPH_MIN_SPEEDUP
+    baseline = str(BASELINES / "BENCH_serve.json")
+    partial = {"schema": serve_base["schema"], "sections": ["graph"],
+               "n_devices": 1,
+               "graph_speedup": serve_base["graph_speedup"],
+               "graph": copy.deepcopy(serve_base["graph"])}
+    good = tmp_path / "graph.json"
+    good.write_text(json.dumps(partial))
+    assert main([str(good), baseline, "--section", "graph"]) == 0
+    partial["graph"]["speedup"] = GRAPH_MIN_SPEEDUP - 0.1
+    bad = tmp_path / "graph_bad.json"
+    bad.write_text(json.dumps(partial))
+    assert main([str(bad), baseline, "--section", "graph"]) == 1
+
+
 def test_compiler_tuned_cycle_regression_fails(compiler_base):
     """An injected tuned-cycle regression trips BOTH compiler gates: the
     absolute never-worse-than-default invariant and the exact baseline
@@ -240,13 +305,18 @@ def test_cli_exit_codes(tmp_path, dse_base):
 
 
 def test_ci_wires_the_gate():
-    """The workflow must actually run the gate after all four smokes
-    (dse, single-device serve, compiler autotune, 8-device fleet)."""
+    """The workflow must actually run the gate after all five smokes
+    (dse, single-device serve, kernel graphs, compiler autotune,
+    8-device fleet)."""
     ci = (ROOT / ".github" / "workflows" / "ci.yml").read_text()
-    assert ci.count("benchmarks.check_bench") == 4
+    assert ci.count("benchmarks.check_bench") == 5
     assert "benchmarks/baselines/BENCH_dse.json" in ci
-    assert ci.count("benchmarks/baselines/BENCH_serve.json") == 2
+    assert ci.count("benchmarks/baselines/BENCH_serve.json") == 3
     assert "benchmarks/baselines/BENCH_compiler.json" in ci
+    # the graph-smoke job runs the graph section alone (single device)
+    # and gates its partial artifact against the serve baseline
+    assert "--graph --fast" in ci
+    assert "--section graph" in ci
     assert "--compiler --fast" in ci
     assert "cancel-in-progress" in ci
     # the fleet-smoke job and one tier-1 leg force 8 host devices
