@@ -292,3 +292,9 @@ def bench_compiler(emit, fast: bool = False,
         f.write("\n")
     emit("compiler/artifact", 0.0, f"wrote {out}")
     return art, problems
+
+
+def run_compiler_section(emit, fast: bool = False) -> list:
+    """Registry section runner (``repro.registry`` SECTIONS ``compiler``)."""
+    _art, problems = bench_compiler(emit, fast=fast)
+    return problems

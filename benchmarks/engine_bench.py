@@ -206,3 +206,15 @@ def main(emit, fast: bool = False) -> None:
         bench_async_launch(emit)
         bench_memsys_sweep(emit)
     bench_dse(emit, fast=fast)
+
+
+def run_dse_section(emit, fast: bool = False) -> list:
+    """Registry section runner (``repro.registry`` SECTIONS ``dse``)."""
+    _art, problems = bench_dse(emit, fast=fast)
+    return problems
+
+
+def run_engine_section(emit, fast: bool = False) -> list:
+    """Registry section runner (``engine``): micro-benches, no gate."""
+    main(emit, fast=fast)
+    return []

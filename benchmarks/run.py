@@ -3,6 +3,12 @@
 Prints ``name,us_per_call,derived`` CSV. Usage:
   PYTHONPATH=src python -m benchmarks.run [--fast] [--engine] [--dse] \
       [--serve] [--compiler]
+
+Section flags are dispatched through the scenario registry
+(``repro.registry`` SECTIONS axis): each registered ``BenchSection``
+carries its CLI flag and a ``module:function`` runner spec, and the CI
+smoke/nightly matrices are generated from the same axis by
+``python -m repro.registry --ci-matrix {smoke,nightly}``.
 ``--fast`` skips the O(n^2) cycle simulations (xcorr/parallel_sel) and
 shrinks the engine/DSE grids.
 ``--engine`` runs only the simulator-engine micro-benchmarks (fused
@@ -53,30 +59,16 @@ def main() -> None:
         print(f"{name},{us:.3f},{derived}")
 
     print("name,us_per_call,derived")
-    if "--serve" in sys.argv:
-        from benchmarks import serve_bench
-        art = serve_bench.bench_serve(emit, fast=fast)
-        _fail(serve_bench.invariant_problems(art))
-        return
-    if "--graph" in sys.argv:
-        from benchmarks import serve_bench
-        art = serve_bench.bench_graph_only(emit, fast=fast)
-        _fail(serve_bench.graph_invariant_problems(art))
-        return
-    if "--dse" in sys.argv:
-        from benchmarks import engine_bench
-        _art, problems = engine_bench.bench_dse(emit, fast=fast)
-        _fail(problems)
-        return
-    if "--compiler" in sys.argv:
-        from benchmarks import compiler_bench
-        _art, problems = compiler_bench.bench_compiler(emit, fast=fast)
-        _fail(problems)
-        return
-    if "--engine" in sys.argv:
-        from benchmarks import engine_bench
-        engine_bench.main(emit, fast=fast)
-        return
+    # flag-bearing sections dispatch through the scenario registry: each
+    # BenchSection names its runner as a "module:function" spec, so a
+    # section added in one file is reachable here with no edit
+    from repro.registry import SECTIONS
+    from repro.registry.core import resolve
+    for name in SECTIONS.names():
+        sec = SECTIONS.get(name)
+        if sec.flag and sec.flag in sys.argv:
+            _fail(resolve(sec.runner)(emit, fast=fast))
+            return
     from benchmarks import ggpu_tables, roofline_table
     ggpu_tables.table1_ppa(emit)
     ggpu_tables.table2_wires(emit)

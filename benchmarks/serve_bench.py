@@ -596,3 +596,14 @@ def bench_graph_only(emit, fast: bool = False, out: str = None) -> dict:
         f.write("\n")
     emit("serve/artifact", 0.0, f"wrote {out}")
     return art
+
+
+def run_serve_section(emit, fast: bool = False) -> list:
+    """Registry section runner (``repro.registry`` SECTIONS ``serve`` and
+    ``fleet``): run the serve suite, return invariant violations."""
+    return invariant_problems(bench_serve(emit, fast=fast))
+
+
+def run_graph_section(emit, fast: bool = False) -> list:
+    """Registry section runner (``graph``): partial-artifact variant."""
+    return graph_invariant_problems(bench_graph_only(emit, fast=fast))

@@ -88,8 +88,15 @@ _DEFS: Dict[str, Callable[..., KernelDef]] = {
 
 def kernel_def(name: str, *args) -> KernelDef:
     """The traceable ``(fn, shapes)`` definition of a suite bench — the
-    re-compilable form a schedule search needs."""
-    fn, shapes = _DEFS[name](*args)
+    re-compilable form a schedule search needs. Resolved through the
+    ``BENCHES`` registry axis, so a drop-in plugin bench that registers
+    a ``kernel_def`` autotunes exactly like a built-in."""
+    from repro.registry import BENCHES
+    spec = BENCHES.get(name)
+    if spec.kernel_def is None:
+        raise KeyError(f"bench {name!r} registers no tensor-DSL "
+                       "kernel_def (ISA-only bench)")
+    fn, shapes = spec.kernel_def(*args)
     return fn, shapes
 
 
@@ -146,16 +153,28 @@ _BUILDERS = {
 }
 
 
+def suite_names() -> list:
+    """The compile-suite membership: every registered bench with a
+    tensor-DSL ``kernel_def``, in legacy table order (plugin benches
+    join the suite — and its gated parity artifacts — by registering a
+    def; ISA-only benches stay engine workloads outside the suite)."""
+    from repro.registry import BENCHES
+    from repro.registry.benches import ordered_names
+    return [n for n in ordered_names()
+            if BENCHES.get(n).kernel_def is not None]
+
+
 def hand_benches(sizes: Optional[Dict[str, Tuple[int, ...]]] = None
                  ) -> Dict[str, "programs.Bench"]:
     """The hand-written benches at the given sizes (one build per name —
     shared by every suite entry point so nothing constructs them twice).
     ``sizes`` maps a name to the ``programs._<name>`` builder's size
     arguments (scalar, gpu[, extra]); defaults are Table III."""
+    from repro.registry import BENCHES
     sizes = dict(sizes or {})
     out = {}
-    for name in _BUILDERS:
-        build = getattr(programs, f"_{name}")
+    for name in suite_names():
+        build = BENCHES.get(name).build
         sz = sizes.get(name)
         out[name] = build(*sz) if sz is not None else build()
     return out

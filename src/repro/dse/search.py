@@ -182,10 +182,10 @@ def sweep_memsys(bench: str = "xcorr",
     for the paper's Table III sizes. Extra keyword arguments become
     ``GGPUConfig`` fields (e.g. ``cache_lines=128``)."""
     from repro.ggpu.engine import GGPUConfig
-    from repro.ggpu.engine.memsys import MEMSYS_REGISTRY
+    from repro.registry import MEMSYS
 
     if memsys is None:
-        memsys = tuple(sorted(MEMSYS_REGISTRY))
+        memsys = tuple(MEMSYS.names())
     ev = Evaluator(benches=(bench,),
                    sizes=None if sizes is None else {bench: sizes})
     out: Dict[Tuple[int, str], dict] = {}

@@ -44,7 +44,7 @@ Implementations:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import NamedTuple, Protocol, runtime_checkable
+from typing import Mapping, NamedTuple, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -215,17 +215,34 @@ class BankedPerCUCache:
         return CacheResult(new_tags, hit, miss, hit_service, fill_cycles)
 
 
-MEMSYS_REGISTRY = {
-    "shared": SharedCache(),
-    "banked": BankedPerCUCache(iso_capacity=False),
-    "banked-iso": BankedPerCUCache(iso_capacity=True),
-}
+from repro.registry import MEMSYS  # noqa: E402  (axis import after models)
+
+MEMSYS.register("shared", SharedCache())
+MEMSYS.register("banked", BankedPerCUCache(iso_capacity=False))
+MEMSYS.register("banked-iso", BankedPerCUCache(iso_capacity=True))
+
+
+class _MemsysMapping(Mapping):
+    """Read-only mapping view of the ``MEMSYS`` registry axis — the
+    compatibility shape of the pre-registry ``MEMSYS_REGISTRY`` dict.
+    Iteration/membership reflect every registered organization,
+    including drop-in plugins (``repro/registry/plugins/``)."""
+
+    def __getitem__(self, name: str) -> MemorySystem:
+        return MEMSYS.get(name)
+
+    def __iter__(self):
+        return iter(MEMSYS.names())
+
+    def __len__(self) -> int:
+        return len(MEMSYS)
+
+
+MEMSYS_REGISTRY: Mapping = _MemsysMapping()
 
 
 def get_memsys(name: str) -> MemorySystem:
-    try:
-        return MEMSYS_REGISTRY[name]
-    except KeyError:
-        raise KeyError(
-            f"unknown memsys {name!r}; choices: {sorted(MEMSYS_REGISTRY)}"
-        ) from None
+    """Resolve a memory-system name through the registry (the axis's
+    ``UnknownPluginError`` is a ``KeyError``, preserving the original
+    contract and message shape)."""
+    return MEMSYS.get(name)

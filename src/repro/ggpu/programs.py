@@ -13,7 +13,7 @@ mat_mul sizes are element counts of the output matrix (16x16 scalar,
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict
 
 import numpy as np
 
@@ -380,11 +380,14 @@ def _reduction(n_scalar=1024, n_gpu=32768, seg=REDUCTION_SEG):
 
 
 def all_benches() -> Dict[str, Bench]:
-    """The paper's seven benches plus the ``reduction`` extension (the
-    paper tables only report the seven in ``PAPER_CYCLES``)."""
-    bs = [_mat_mul(), _copy(), _vec_mul(), _fir(), _div_int(), _xcorr(),
-          _parallel_sel(), _reduction()]
-    return {b.name: b for b in bs}
+    """Every bench registered on the ``BENCHES`` axis, built at default
+    (Table III) sizes: the paper's seven plus the ``reduction``
+    extension in their legacy table order, then any drop-in plugin
+    benches (``repro/registry/plugins/``). The paper tables only report
+    the seven in ``PAPER_CYCLES``."""
+    from repro.registry import BENCHES
+    from repro.registry.benches import ordered_names
+    return {n: BENCHES.get(n).build() for n in ordered_names()}
 
 
 # paper values for comparison (Table III, k-cycles)

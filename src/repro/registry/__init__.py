@@ -1,0 +1,93 @@
+"""Unified scenario registry: every pluggable axis of the system.
+
+One introspectable surface (DESIGN.md §Scenario registry) spanning six
+axes, each an :class:`~repro.registry.core.Axis` whose built-ins
+register themselves from the named provider modules on first query:
+
+  ==============  =======================================  ==================
+  axis            plugin contract                          built-ins from
+  ==============  =======================================  ==================
+  ``BENCHES``     :class:`~repro.registry.benches.         repro.registry.
+                  BenchSpec` (build a ``programs.Bench``   benches
+                  at given sizes; optional DSL
+                  ``kernel_def`` for the autotuner)
+  ``MEMSYS``      ``engine.memsys.MemorySystem``           repro.ggpu.engine.
+                  instance (cycle model of a cache         memsys
+                  organization)
+  ``SCHEDULERS``  chunk-planning policy:                   repro.serve.
+                  ``(requests, cfg, max_batch) ->          policies
+                  List[Chunk]``
+  ``ROUTERS``     fleet routing strategy *class*:          repro.serve.
+                  instances expose ``pick(fleet, req)      routing
+                  -> FleetDevice``
+  ``TRAFFIC``     arrival-trace generator:                 repro.serve.
+                  ``(n, seed=0) -> np.ndarray`` of         loadgen
+                  seconds-from-start times
+  ``SECTIONS``    :class:`~repro.registry.sections.        repro.registry.
+                  BenchSection` (a benchmark-harness       sections
+                  section + its CI smoke leg metadata)
+  ==============  =======================================  ==================
+
+Every axis also scans the ``repro.registry.plugins`` drop-in package, so
+a new scenario on any axis is one new file there — it resolves by name
+everywhere (``GGPUConfig(memsys=...)``, ``Scheduler(policy=...)``,
+``Fleet(router=...)``), and ``python -m repro.registry --json`` makes it
+appear in the CI smoke and nightly cross-product matrices with no
+workflow edit (README "Add a scenario in one file").
+
+``AXES`` maps axis name -> axis for generic enumeration (the CLI and the
+``registry-smoke`` job iterate it).
+"""
+from repro.registry.core import (Axis, DuplicateNameError, RegistryError,
+                                 UnknownPluginError)
+
+BENCHES = Axis(
+    "bench",
+    doc="workloads: ISA benches with optional DSL kernel definitions",
+    providers=("repro.registry.benches",))
+
+MEMSYS = Axis(
+    "memsys",
+    doc="memory-system cycle models (cache organizations)",
+    providers=("repro.ggpu.engine.memsys",))
+
+SCHEDULERS = Axis(
+    "scheduler",
+    doc="chunk-planning policies for the continuous-batching core",
+    providers=("repro.serve.policies",))
+
+ROUTERS = Axis(
+    "router",
+    doc="fleet placement strategies (router classes)",
+    providers=("repro.serve.routing",))
+
+TRAFFIC = Axis(
+    "traffic",
+    doc="open-loop arrival-trace generators",
+    providers=("repro.serve.loadgen",))
+
+SECTIONS = Axis(
+    "section",
+    doc="benchmark-harness sections and their CI smoke legs",
+    providers=("repro.registry.sections",))
+
+#: axis name -> axis; the generic enumeration surface. ``sections`` is
+#: CI plumbing rather than a scenario dimension, so the scenario
+#: cross-product (nightly sweeps) uses ``SCENARIO_AXES``.
+AXES = {
+    "benches": BENCHES,
+    "memsys": MEMSYS,
+    "schedulers": SCHEDULERS,
+    "routers": ROUTERS,
+    "traffic": TRAFFIC,
+    "sections": SECTIONS,
+}
+
+SCENARIO_AXES = {k: AXES[k] for k in
+                 ("benches", "memsys", "schedulers", "routers", "traffic")}
+
+__all__ = [
+    "AXES", "BENCHES", "MEMSYS", "ROUTERS", "SCENARIO_AXES", "SCHEDULERS",
+    "SECTIONS", "TRAFFIC", "Axis", "DuplicateNameError", "RegistryError",
+    "UnknownPluginError",
+]

@@ -1,0 +1,149 @@
+"""Registry CLI — the machine-readable enumeration surface CI consumes.
+
+Modes (exactly one):
+
+  ``--json``
+      Full enumeration: every axis's plugin names (plus per-plugin
+      detail where the spec provides ``describe()``) and the generated
+      CI matrices. Schema ``ggpu-registry/1``.
+  ``--ci-matrix {smoke,nightly}``
+      One matrix as compact JSON on a single line, ready for
+      ``$GITHUB_OUTPUT`` + ``fromJSON``:
+        * ``smoke``   — the per-PR ``bench-smoke`` job: one leg per
+          registered bench section with ``ci_smoke=True`` (run args,
+          artifact/baseline paths, gate args, XLA flags).
+        * ``nightly`` — the scenario cross-product: one cell per
+          (memsys, policy, router) combination (each cell replays every
+          registered traffic pattern over every bench), plus one
+          full-sweep leg per artifact section (``run_args`` with
+          ``--fast`` stripped).
+  ``--selfcheck``
+      Discover every axis; exit non-zero on import errors, duplicate
+      names (both raise), or an empty axis.
+  ``--smoke``
+      ``--selfcheck`` plus one minimal launch per registered scenario
+      (the PR-blocking ``registry-smoke`` CI job).
+  ``--run-cell MEMSYS POLICY ROUTER``
+      Execute one nightly cross-product cell.
+
+Adding a scenario in a drop-in file under ``repro/registry/plugins/``
+changes these outputs — and therefore the CI matrices — with no
+workflow edit.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.registry import AXES, SECTIONS
+
+SCHEMA = "ggpu-registry/1"
+
+
+def _sections(ci_only: bool = True):
+    secs = [SECTIONS.get(n) for n in SECTIONS.names()]
+    return [s for s in secs if s.ci_smoke] if ci_only else secs
+
+
+def smoke_matrix() -> dict:
+    """The ``bench-smoke`` strategy matrix (include-list form)."""
+    return {"include": [s.matrix_entry() for s in _sections()]}
+
+
+def nightly_matrix() -> dict:
+    """The nightly matrix: scenario cross-product cells + full sweeps."""
+    include = []
+    for ms in AXES["memsys"].names():
+        for pol in AXES["schedulers"].names():
+            for rt in AXES["routers"].names():
+                include.append({
+                    "kind": "cell",
+                    "memsys": ms, "policy": pol, "router": rt,
+                    "xla_flags": "",
+                    "name": f"cell-{ms}-{pol}-{rt}",
+                })
+    seen = set()
+    for s in _sections():
+        # one full (non --fast) sweep per distinct run; the fleet
+        # section re-runs --serve but under 8 sharded devices, so the
+        # dedupe key includes the XLA flags
+        full = " ".join(a for a in s.run_args.split() if a != "--fast")
+        if not full or (full, s.xla_flags) in seen:
+            continue
+        seen.add((full, s.xla_flags))
+        include.append({
+            "kind": "sweep", "section": s.name, "run_args": full,
+            "artifact": s.artifact,
+            "artifact_name": f"{s.artifact_name or s.name}-nightly",
+            "xla_flags": s.xla_flags,
+            "name": f"sweep-{s.name}",
+        })
+    return {"include": include}
+
+
+def full_enumeration() -> dict:
+    axes = {}
+    for axis_name, axis in AXES.items():
+        entries = {}
+        for name, obj in axis.items():
+            detail = obj.describe() if hasattr(obj, "describe") else {}
+            entries[name] = detail
+        axes[axis_name] = {"names": axis.names(), "detail": entries}
+    return {
+        "schema": SCHEMA,
+        "axes": axes,
+        "ci": {"smoke": smoke_matrix(), "nightly": nightly_matrix()},
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.registry",
+        description="Enumerate, self-check, and smoke the scenario "
+                    "registry (see module doc).")
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--json", action="store_true",
+                      help="full enumeration + CI matrices as JSON")
+    mode.add_argument("--ci-matrix", choices=("smoke", "nightly"),
+                      help="one CI matrix as single-line JSON")
+    mode.add_argument("--selfcheck", action="store_true",
+                      help="fail on empty axes / duplicate names / "
+                           "import errors")
+    mode.add_argument("--smoke", action="store_true",
+                      help="selfcheck + one minimal launch per "
+                           "registered scenario")
+    mode.add_argument("--run-cell", nargs=3,
+                      metavar=("MEMSYS", "POLICY", "ROUTER"),
+                      help="run one nightly cross-product cell")
+    args = ap.parse_args(argv)
+
+    def emit(line: str) -> None:
+        print(line)
+
+    if args.json:
+        json.dump(full_enumeration(), sys.stdout, indent=2, sort_keys=True)
+        print()
+        return 0
+    if args.ci_matrix:
+        matrix = smoke_matrix() if args.ci_matrix == "smoke" \
+            else nightly_matrix()
+        print(json.dumps(matrix, sort_keys=True))
+        return 0
+
+    from repro.registry import smoke as smoke_mod
+    if args.selfcheck or args.smoke:
+        problems = smoke_mod.selfcheck(emit)
+        if args.smoke and not problems:
+            problems += smoke_mod.smoke_all(emit)
+    else:
+        ms, pol, rt = args.run_cell
+        problems = smoke_mod.run_cell(ms, pol, rt, emit)
+    for p in problems:
+        print(f"REGISTRY PROBLEM: {p}", file=sys.stderr)
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

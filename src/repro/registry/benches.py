@@ -1,0 +1,87 @@
+"""Bench axis built-ins: the eight suite benches as registry plugins.
+
+A :class:`BenchSpec` is the plugin contract of the ``BENCHES`` axis —
+the registered form of what used to be hard-wired in two places
+(``programs.all_benches()`` and ``compiler.suite._DEFS``):
+
+  * ``build(*sizes)`` constructs the ``programs.Bench`` record (ISA
+    programs, memory images, NumPy reference); no arguments means the
+    paper's Table III sizes.
+  * ``kernel_def(*sizes)`` (optional) is the traceable tensor-DSL
+    ``(fn, shapes)`` definition the compiler/autotuner re-lowers under
+    candidate schedules; ``None`` marks an ISA-only bench the compiler
+    sections skip.
+  * ``smoke_sizes`` are the (scalar, gpu[, extra]) build arguments the
+    ``registry-smoke`` CI job uses for its one-minimal-launch check —
+    small enough that every registered bench simulates in well under a
+    second.
+  * ``paper`` marks the seven benches the paper's tables report.
+
+``ordered_names()`` preserves the legacy ``all_benches()`` ordering
+(paper order, then extensions, then any plugin benches sorted) so the
+benchmark tables keep their historical row order while the axis itself
+enumerates sorted like every other axis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+from repro.registry import BENCHES
+
+#: the pre-registry ``all_benches()`` insertion order, kept so bench
+#: tables/CSV rows don't reshuffle under the registry refactor
+LEGACY_ORDER = ("mat_mul", "copy", "vec_mul", "fir", "div_int", "xcorr",
+                "parallel_sel", "reduction")
+
+
+@dataclass(frozen=True)
+class BenchSpec:
+    """One registered workload (see module doc)."""
+    name: str
+    build: Callable          # (*sizes) -> programs.Bench
+    kernel_def: Optional[Callable] = None  # (*sizes) -> (fn, shapes)
+    smoke_sizes: Tuple[int, ...] = ()
+    paper: bool = False
+
+    def describe(self) -> dict:
+        return {
+            "paper": self.paper,
+            "has_kernel_def": self.kernel_def is not None,
+            "smoke_sizes": list(self.smoke_sizes),
+        }
+
+
+def _register_builtins() -> None:
+    # lazy domain imports: the registry package itself must stay light,
+    # and ``programs``/``suite`` both reach back into the registry
+    from repro.compiler import suite
+    from repro.ggpu import programs
+
+    smoke = {
+        "mat_mul": (4, 8),
+        "copy": (32, 128),
+        "vec_mul": (32, 128),
+        "fir": (16, 64),
+        "div_int": (32, 64),
+        "xcorr": (16, 32),
+        "parallel_sel": (16, 32),
+        "reduction": (64, 128),
+    }
+    for name in LEGACY_ORDER:
+        BENCHES.register(name, BenchSpec(
+            name=name,
+            build=getattr(programs, f"_{name}"),
+            kernel_def=suite._DEFS.get(name),
+            smoke_sizes=smoke[name],
+            paper=name in programs.PAPER_CYCLES))
+
+
+_register_builtins()
+
+
+def ordered_names() -> list:
+    """Bench names in legacy table order, plugin extras (sorted) last."""
+    names = BENCHES.names()
+    legacy = [n for n in LEGACY_ORDER if n in names]
+    return legacy + [n for n in names if n not in LEGACY_ORDER]

@@ -1,0 +1,123 @@
+"""Section axis built-ins: the benchmark-harness sections and their CI legs.
+
+A :class:`BenchSection` describes one ``benchmarks.run`` section — the
+unit CI smokes per-PR. ``benchmarks/run.py`` dispatches its CLI flags
+through this axis, and ``python -m repro.registry --json`` emits the
+``bench-smoke`` matrix from the sections with ``ci_smoke=True``, so a
+new bench section (one registration here or in a drop-in plugin, plus
+its runner) gets a CI smoke leg with **no workflow edit**: the matrix
+entry carries the run arguments, artifact/baseline paths, extra
+``check_bench`` arguments, and the leg's ``XLA_FLAGS``.
+
+``runner`` is a ``"module:function"`` spec resolved lazily by
+``benchmarks/run.py`` — the registry never imports the ``benchmarks``
+package (which lives outside ``src/``), it only names entry points. The
+runner contract is ``runner(emit, fast) -> list_of_problem_strings``
+(empty list = section healthy).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+from repro.registry import SECTIONS
+
+
+@dataclass(frozen=True)
+class BenchSection:
+    """One benchmark section + its CI smoke-leg metadata."""
+    name: str
+    runner: str                      # "module:function" (emit, fast) spec
+    flag: Optional[str] = None       # benchmarks.run CLI flag, if any
+    description: str = ""
+    ci_smoke: bool = True            # gets a per-PR bench-smoke leg
+    run_args: str = ""               # benchmarks.run args for the CI leg
+    artifact: str = ""               # file the section writes
+    artifact_name: str = ""          # CI upload-artifact name
+    baseline: str = ""               # committed baseline check_bench gates on
+    check_args: Tuple[str, ...] = () # extra check_bench arguments
+    xla_flags: str = ""              # XLA_FLAGS for the CI leg
+    timeout_minutes: int = 20
+    gate_sections: Tuple[str, ...] = field(default=())  # check_bench
+    #                                 --section values this section accepts
+
+    def matrix_entry(self) -> dict:
+        """The ``bench-smoke`` matrix row for this section (strings only:
+        GitHub Actions matrix values interpolate into shell commands)."""
+        return {
+            "section": self.name,
+            "run_args": self.run_args,
+            "artifact": self.artifact,
+            "artifact_name": self.artifact_name or self.name,
+            "baseline": self.baseline,
+            "check_args": " ".join(self.check_args),
+            "xla_flags": self.xla_flags,
+        }
+
+    def describe(self) -> dict:
+        d = self.matrix_entry()
+        d.update(ci_smoke=self.ci_smoke, flag=self.flag or "",
+                 runner=self.runner, description=self.description)
+        del d["section"]
+        return d
+
+
+_BASELINES = "benchmarks/baselines"
+
+SECTIONS.register("dse", BenchSection(
+    name="dse", flag="--dse",
+    runner="benchmarks.engine_bench:run_dse_section",
+    description="unified DSE Pareto sweep + BENCH_dse.json artifact",
+    run_args="--dse --fast",
+    artifact="BENCH_dse.json", artifact_name="BENCH_dse",
+    baseline=f"{_BASELINES}/BENCH_dse.json"))
+
+SECTIONS.register("serve", BenchSection(
+    name="serve", flag="--serve",
+    runner="benchmarks.serve_bench:run_serve_section",
+    description="serving throughput, sharding, open-loop latency, fleet "
+                "routing, kernel graphs + BENCH_serve.json artifact",
+    run_args="--serve --fast",
+    artifact="BENCH_serve.json", artifact_name="BENCH_serve",
+    baseline=f"{_BASELINES}/BENCH_serve.json"))
+
+SECTIONS.register("compiler", BenchSection(
+    name="compiler", flag="--compiler",
+    runner="benchmarks.compiler_bench:run_compiler_section",
+    description="tensor-DSL suite parity + autotune + codesign sweep "
+                "+ BENCH_compiler.json artifact",
+    run_args="--compiler --fast",
+    artifact="BENCH_compiler.json", artifact_name="BENCH_compiler",
+    baseline=f"{_BASELINES}/BENCH_compiler.json"))
+
+SECTIONS.register("graph", BenchSection(
+    name="graph", flag="--graph",
+    runner="benchmarks.serve_bench:run_graph_section",
+    description="device-resident kernel-graph path vs host-staged chains "
+                "(partial serve artifact, gated with --section graph)",
+    run_args="--graph --fast",
+    artifact="BENCH_graph.json", artifact_name="BENCH_graph",
+    baseline=f"{_BASELINES}/BENCH_serve.json",
+    check_args=("--section", "graph"),
+    gate_sections=("graph",)))
+
+# the serve section again under 8 simulated host devices: the leg that
+# exercises real mesh sharding and the >= 1.5x sharded throughput gate
+SECTIONS.register("fleet", BenchSection(
+    name="fleet", flag=None,
+    runner="benchmarks.serve_bench:run_serve_section",
+    description="8-simulated-device sharded serve (mesh shard_map leg of "
+                "the serve section)",
+    run_args="--serve --fast",
+    artifact="BENCH_serve.json", artifact_name="BENCH_serve-sharded",
+    baseline=f"{_BASELINES}/BENCH_serve.json",
+    xla_flags="--xla_force_host_platform_device_count=8"))
+
+# engine micro-benchmarks: a local section with no CI smoke leg (the
+# engine paths are covered by tier-1 tests and the dse section's gate)
+SECTIONS.register("engine", BenchSection(
+    name="engine", flag="--engine",
+    runner="benchmarks.engine_bench:run_engine_section",
+    description="simulator-engine micro-benchmarks (fused dispatch, "
+                "batched queue, memsys sweep)",
+    ci_smoke=False))

@@ -19,18 +19,23 @@ from repro.serve.graphs import (GraphTickets, extract_outputs,
 from repro.serve.llm import Engine, EngineConfig
 from repro.serve.loadgen import (LoadResult, bursty_arrivals,
                                  poisson_arrivals, replay)
+from repro.serve.policies import plan_fifo
 from repro.serve.request import Dep, KernelLaunch, Request, Result
+from repro.serve.routing import EarliestFinishRouter, RoundRobinRouter
 from repro.serve.scheduler import (AdmissionError, Chunk, DependencyError,
                                    LaunchQueue, Quarantined, Scheduler,
                                    plan_chunks, plan_waves, wavefronts)
 
 __all__ = [
-    "AdmissionError", "Chunk", "Dep", "DependencyError", "Engine",
+    "AdmissionError", "Chunk", "Dep", "DependencyError",
+    "EarliestFinishRouter", "Engine",
     "EngineConfig", "Executor", "ExecutorStats", "Fleet", "FleetDevice",
     "GraphTickets", "KernelLaunch", "LaunchQueue", "LoadResult",
-    "PendingChunk", "Quarantined", "Request", "Result", "Scheduler",
+    "PendingChunk", "Quarantined", "Request", "Result", "RoundRobinRouter",
+    "Scheduler",
     "bursty_arrivals", "extract_outputs", "get_executor",
-    "pinned_makespan", "plan_chunks", "plan_waves", "poisson_arrivals",
+    "pinned_makespan", "plan_chunks", "plan_fifo", "plan_waves",
+    "poisson_arrivals",
     "replay", "run_chains_host_staged", "run_program",
     "run_program_host_staged",
     "run_programs_host_staged", "sim_key", "submit_program",

@@ -92,10 +92,15 @@ class Fleet:
     ``configs`` may be raw ``GGPUConfig``s or (name, config) pairs —
     e.g. ``[(p.label(), p.config) for p in search_result.frontier]``.
     ``mesh`` binds simulated devices to physical ones (see module doc).
+    ``router`` picks the placement strategy by registered name (the
+    ``ROUTERS`` registry axis; ``"earliest-finish"`` is the legacy
+    greedy placement, see ``repro.serve.routing``) or as a router
+    instance/class with a ``pick(fleet, req)`` method. ``policy`` is
+    forwarded to every device scheduler (``SCHEDULERS`` axis).
     """
 
     def __init__(self, configs: Sequence, max_batch: int = 64, *,
-                 mesh=None):
+                 mesh=None, router="earliest-finish", policy="cohort"):
         configs = list(configs)
         slices = _mesh_slices(mesh, len(configs)) if mesh is not None \
             else [[] for _ in configs]
@@ -112,10 +117,17 @@ class Fleet:
             self.devices.append(FleetDevice(
                 name, cfg,
                 Scheduler(cfg, max_batch=max_batch, mesh=sub_mesh,
-                          device=sub_dev),
+                          device=sub_dev, policy=policy),
                 mesh=sub_mesh, device=sub_dev))
         if len(self.devices) < 1:
             raise ValueError("fleet needs at least one device")
+        # routing strategy: a registered name resolves to a router class
+        # on the ROUTERS axis; classes are instantiated per fleet
+        # (routers may carry state), prebuilt instances pass through
+        if isinstance(router, str):
+            from repro.registry import ROUTERS
+            router = ROUTERS.get(router)
+        self.router = router() if isinstance(router, type) else router
         names = [d.name for d in self.devices]
         if len(set(names)) != len(names):
             raise ValueError(f"fleet device names must be unique: {names}"
@@ -204,7 +216,7 @@ class Fleet:
                 dataclasses.replace(d, producer=self._local[d.producer])
                 for d in req.deps)
         else:
-            dev = min(self.devices, key=lambda d: self.finish_us(d, req))
+            dev = self.router.pick(self, req)
         est = self.estimate_us(dev, req) * self._shard_scale(dev)
         local = dev.scheduler.submit_request(req)
         dev.eta_us += est

@@ -35,6 +35,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.registry import TRAFFIC
 from repro.serve.request import Request
 
 __all__ = ["poisson_arrivals", "bursty_arrivals", "replay", "LoadResult"]
@@ -59,6 +60,28 @@ def bursty_arrivals(n_bursts: int, burst: int, gap_s: float,
     rng = np.random.default_rng(seed)
     starts = np.cumsum(rng.exponential(gap_s, int(n_bursts)))
     return np.repeat(starts, int(burst))
+
+
+# -- registry plugins --------------------------------------------------------
+# The TRAFFIC axis contract is the *normalized* generator signature
+# ``(n, seed=0) -> arrivals`` so CI sweeps can drive any registered
+# pattern interchangeably; the raw parameterized functions above stay the
+# API for callers that tune rates/shapes themselves.
+
+@TRAFFIC.register("poisson")
+def poisson_traffic(n: int, seed: int = 0,
+                    rate_hz: float = 200.0) -> np.ndarray:
+    """Registry adapter: memoryless arrivals at a fixed default rate."""
+    return poisson_arrivals(rate_hz, n, seed)
+
+
+@TRAFFIC.register("bursty")
+def bursty_traffic(n: int, seed: int = 0, burst: int = 8,
+                   gap_s: float = 0.004) -> np.ndarray:
+    """Registry adapter: all-at-once bursts, trimmed to exactly ``n``
+    arrivals (the adversarial shape for continuous batching)."""
+    n_bursts = -(-int(n) // burst)
+    return bursty_arrivals(n_bursts, burst, gap_s, seed)[:int(n)]
 
 
 @dataclasses.dataclass

@@ -1,0 +1,49 @@
+"""Fleet routing strategies — the ``ROUTERS`` registry axis built-ins.
+
+A router is a *class*; ``Fleet(router="name")`` resolves the name
+through the registry and instantiates one router per fleet (routers may
+carry state — ``round-robin`` does). The instance contract is::
+
+    pick(fleet, req) -> FleetDevice
+
+called for every dependency-free submission (requests with ``deps`` are
+always pinned to their producers' device, regardless of router — device
+residency of graph edges is a correctness property, not a policy).
+Routers read the fleet's public estimate surface (``finish_us``,
+``estimate_us``, ``devices``) and must not mutate fleet state: the
+fleet itself charges the backlog after the pick.
+
+Built-ins:
+
+  * ``earliest-finish`` — the default greedy placement: minimize
+    (shard-width-discounted backlog + estimated service time); the
+    pre-registry behavior, placement-exact.
+  * ``round-robin`` — cycle through devices in order, ignoring load and
+    service estimates. The baseline that shows what the learned
+    estimates buy; also the fairness floor when estimates are known to
+    be garbage (e.g. adversarial traffic of never-seen kernels).
+"""
+from __future__ import annotations
+
+from repro.registry import ROUTERS
+
+
+@ROUTERS.register("earliest-finish")
+class EarliestFinishRouter:
+    """Greedy earliest-finish-time placement (see module doc)."""
+
+    def pick(self, fleet, req):
+        return min(fleet.devices, key=lambda d: fleet.finish_us(d, req))
+
+
+@ROUTERS.register("round-robin")
+class RoundRobinRouter:
+    """Stateful cyclic placement, blind to load and estimates."""
+
+    def __init__(self):
+        self._next = 0
+
+    def pick(self, fleet, req):
+        dev = fleet.devices[self._next % len(fleet.devices)]
+        self._next += 1
+        return dev

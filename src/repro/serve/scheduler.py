@@ -62,6 +62,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ggpu.engine import BlockPatch, GGPUConfig, KernelLaunchError
+from repro.registry import SCHEDULERS
 from repro.serve.executors import Executor, PendingChunk
 from repro.serve.request import Dep, Request, Result
 
@@ -156,12 +157,16 @@ class Scheduler:
     scales the planning width — chunks are planned at ``max_batch`` *per
     shard* (``max_batch * executor.shards`` launches folded into one
     dispatch), which is where the sharded throughput win comes from: one
-    dispatch covers what would otherwise be ``shards`` pipelined ones."""
+    dispatch covers what would otherwise be ``shards`` pipelined ones.
+    ``policy`` selects the chunk-planning strategy by registered name
+    (the ``SCHEDULERS`` registry axis; ``"cohort"`` is the legacy plan,
+    see ``repro.serve.policies``) or as a direct callable with the
+    ``plan_chunks`` contract."""
 
     def __init__(self, cfg: Optional[GGPUConfig] = None, *,
                  executor: Optional[Executor] = None, max_batch: int = 64,
                  max_pending: Optional[int] = None, max_inflight: int = 8,
-                 mesh=None, device=None):
+                 mesh=None, device=None, policy="cohort"):
         if (cfg is None) == (executor is None):
             raise ValueError("pass exactly one of cfg or executor")
         if executor is not None and (mesh is not None or device is not None):
@@ -174,6 +179,13 @@ class Scheduler:
         self.executor = executor if executor is not None \
             else Executor(cfg, mesh=mesh, device=device)
         self.cfg = self.executor.cfg
+        # chunk-planning policy: a registered name (SCHEDULERS axis —
+        # "cohort" is the legacy plan) or a callable with the
+        # ``plan_chunks`` contract
+        self.policy = policy if isinstance(policy, str) else \
+            getattr(policy, "__name__", str(policy))
+        self._plan = SCHEDULERS.get(policy) if isinstance(policy, str) \
+            else policy
         self.max_batch = max_batch
         self.max_pending = max_pending
         self.max_inflight = max_inflight
@@ -313,7 +325,7 @@ class Scheduler:
         taken = 0
         while budget is None or taken < budget:
             items = self._ready()
-            chunks = plan_chunks(items, self.cfg, self.plan_batch)
+            chunks = self._plan(items, self.cfg, self.plan_batch)
             progress = False
             for chunk in chunks:
                 if budget is not None and taken >= budget:

@@ -304,27 +304,61 @@ def test_cli_exit_codes(tmp_path, dse_base):
     assert main([str(bad), baseline]) == 1
 
 
+def test_unknown_section_rejected_gracefully(tmp_path, serve_base):
+    """An unknown ``--section`` is a clean gate failure (violation list +
+    exit 1), not a traceback — a registry section without a check_bench
+    restriction must not silently pass the serve gate."""
+    violations = check_artifacts(copy.deepcopy(serve_base), serve_base,
+                                 section="nope")
+    assert violations == ["unknown serve section 'nope'"]
+    fresh = tmp_path / "fresh.json"
+    fresh.write_text(json.dumps(serve_base))
+    baseline = str(BASELINES / "BENCH_serve.json")
+    assert main([str(fresh), baseline, "--section", "nope"]) == 1
+
+
 def test_ci_wires_the_gate():
-    """The workflow must actually run the gate after all five smokes
-    (dse, single-device serve, kernel graphs, compiler autotune,
-    8-device fleet)."""
+    """CI runs every smoke leg through one matrix job whose rows come
+    from the scenario registry (``python -m repro.registry``), gating
+    each artifact against the matrix-supplied baseline; the smoke matrix
+    itself must reproduce the five legacy smoke legs."""
     ci = (ROOT / ".github" / "workflows" / "ci.yml").read_text()
-    assert ci.count("benchmarks.check_bench") == 5
-    assert "benchmarks/baselines/BENCH_dse.json" in ci
-    assert ci.count("benchmarks/baselines/BENCH_serve.json") == 3
-    assert "benchmarks/baselines/BENCH_compiler.json" in ci
-    # the graph-smoke job runs the graph section alone (single device)
-    # and gates its partial artifact against the serve baseline
-    assert "--graph --fast" in ci
-    assert "--section graph" in ci
-    assert "--compiler --fast" in ci
+    # the matrix is generated by the registry CLI, then consumed via
+    # fromJSON — no per-section job definitions remain
+    assert "repro.registry --ci-matrix smoke" in ci
+    assert "fromJSON(needs.registry-enumerate.outputs.smoke)" in ci
+    assert "benchmarks.check_bench ${{ matrix.artifact }}" in ci
+    assert "${{ matrix.baseline }}" in ci and "${{ matrix.check_args }}" in ci
+    # the PR-blocking plugin-health job
+    assert "repro.registry --selfcheck" in ci
+    assert "repro.registry --smoke" in ci
     assert "cancel-in-progress" in ci
-    # the fleet-smoke job and one tier-1 leg force 8 host devices
-    assert ci.count("--xla_force_host_platform_device_count=8") == 2
+    # only the tier-1 8-device leg hard-codes XLA flags now; the fleet
+    # leg's flags travel in the registry matrix
+    assert ci.count("--xla_force_host_platform_device_count=8") == 1
+
+    from repro.registry.__main__ import smoke_matrix
+    rows = {e["section"]: e for e in smoke_matrix()["include"]}
+    assert {"dse", "serve", "graph", "compiler", "fleet"} <= set(rows)
+    assert rows["dse"]["baseline"] == "benchmarks/baselines/BENCH_dse.json"
+    assert rows["compiler"]["baseline"] \
+        == "benchmarks/baselines/BENCH_compiler.json"
+    assert sum(e["baseline"] == "benchmarks/baselines/BENCH_serve.json"
+               for e in rows.values()) == 3
+    assert rows["graph"]["run_args"] == "--graph --fast"
+    assert rows["graph"]["check_args"] == "--section graph"
+    assert rows["compiler"]["run_args"] == "--compiler --fast"
+    assert "device_count=8" in rows["fleet"]["xla_flags"]
+
     nightly = (ROOT / ".github" / "workflows" / "nightly.yml").read_text()
-    assert "schedule" in nightly and "--compiler" in nightly
-    # the nightly sweep keeps the full schedule space (no --fast) and
-    # uploads the artifact, like the PR smoke does
-    assert "--compiler --fast" not in nightly
-    assert nightly.count("BENCH_compiler.json") >= 1
-    assert ci.count("BENCH_compiler.json") >= 2
+    assert "schedule" in nightly
+    assert "repro.registry --ci-matrix nightly" in nightly
+    assert "repro.registry --run-cell" in nightly
+    from repro.registry.__main__ import nightly_matrix
+    sweeps = [e for e in nightly_matrix()["include"]
+              if e["kind"] == "sweep"]
+    # the nightly sweeps keep the full grids (no --fast) and include the
+    # legacy compiler sweep, artifact upload intact
+    assert any(e["run_args"] == "--compiler"
+               and e["artifact"] == "BENCH_compiler.json" for e in sweeps)
+    assert all("--fast" not in e["run_args"] for e in sweeps)

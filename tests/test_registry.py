@@ -1,0 +1,260 @@
+"""Scenario registry (``repro.registry``): decorator registration,
+duplicate-name rejection, lazy provider discovery, deterministic
+enumeration, the Mapping-compatible legacy views, and the CI matrix
+surface the workflows consume."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.registry import (AXES, BENCHES, MEMSYS, ROUTERS, SCHEDULERS,
+                            SECTIONS, TRAFFIC)
+from repro.registry.core import (Axis, DuplicateNameError, RegistryError,
+                                 UnknownPluginError, resolve)
+
+
+# ---------------------------------------------------------------- core
+
+def _axis():
+    return Axis("thing", providers=(), scan_plugins=False)
+
+
+def test_decorator_and_direct_registration():
+    ax = _axis()
+
+    @ax.register("deco")
+    def plugin():
+        return 1
+
+    ax.register("direct", plugin)
+    assert ax.get("deco") is plugin          # decorator returns the obj
+    assert ax.get("direct") is plugin
+    assert plugin() == 1
+
+
+def test_duplicate_name_rejected():
+    ax = _axis()
+    ax.register("dup", object())
+    with pytest.raises(DuplicateNameError, match="dup"):
+        ax.register("dup", object())
+
+
+@pytest.mark.parametrize("bad", ["", None, 3])
+def test_invalid_names_rejected(bad):
+    with pytest.raises(RegistryError):
+        _axis().register(bad, object())
+
+
+def test_unknown_name_is_keyerror_listing_choices():
+    ax = _axis()
+    ax.register("a", 1)
+    ax.register("b", 2)
+    with pytest.raises(UnknownPluginError) as exc:
+        ax.get("c")
+    assert isinstance(exc.value, KeyError)
+    assert "'a'" in str(exc.value) and "'b'" in str(exc.value)
+
+
+def test_enumeration_is_sorted_not_insertion_ordered():
+    ax = _axis()
+    for name in ("zeta", "alpha", "mid"):
+        ax.register(name, name.upper())
+    assert ax.names() == ["alpha", "mid", "zeta"]
+    assert [n for n, _ in ax.items()] == ["alpha", "mid", "zeta"]
+    assert "mid" in ax and len(ax) == 3
+
+
+def test_discovery_failure_reraises_on_retry():
+    ax = Axis("broken", providers=("no_such_provider_module_xyz",),
+              scan_plugins=False)
+    with pytest.raises(ModuleNotFoundError):
+        ax.names()
+    # the failed discovery must roll back, not latch an empty axis
+    with pytest.raises(ModuleNotFoundError):
+        ax.names()
+
+
+def test_resolve_module_function_spec():
+    fn = resolve("json:dumps")
+    assert fn([1]) == "[1]"
+    with pytest.raises(RegistryError):
+        resolve("json:no_such_attr")
+
+
+def test_provider_import_is_lazy():
+    """Importing repro.registry must not import the provider modules;
+    the first axis query must. (Subprocess: this process's sys.modules
+    is already polluted by other tests.)"""
+    code = (
+        "import sys\n"
+        "import repro.registry\n"
+        "assert 'repro.serve.loadgen' not in sys.modules, 'eager import'\n"
+        "repro.registry.TRAFFIC.names()\n"
+        "assert 'repro.serve.loadgen' in sys.modules, 'discovery missed'\n"
+    )
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+
+
+# ------------------------------------------------------------- the axes
+
+def test_all_axes_discover_builtins():
+    assert BENCHES.names() == sorted(["mat_mul", "copy", "vec_mul", "fir",
+                                      "div_int", "xcorr", "parallel_sel",
+                                      "reduction"])
+    assert MEMSYS.names() == ["banked", "banked-iso", "shared"]
+    assert {"cohort", "fifo"} <= set(SCHEDULERS.names())
+    assert {"earliest-finish", "round-robin"} <= set(ROUTERS.names())
+    assert {"poisson", "bursty"} <= set(TRAFFIC.names())
+    assert {"dse", "serve", "compiler", "graph", "fleet",
+            "engine"} <= set(SECTIONS.names())
+    for name, axis in AXES.items():
+        assert len(axis) > 0, f"axis {name} is empty"
+
+
+def test_dropin_plugin_discovered():
+    """The one-file plugin package entry is visible on its axis and in
+    the machine-readable enumeration CI consumes."""
+    from repro.registry.__main__ import full_enumeration
+
+    assert "heavy-tail" in TRAFFIC.names()
+    arr = TRAFFIC.get("heavy-tail")(16, 3)
+    assert len(arr) == 16 and all(b >= a for a, b in zip(arr, arr[1:]))
+    enum = full_enumeration()
+    assert enum["schema"] == "ggpu-registry/1"
+    assert "heavy-tail" in enum["axes"]["traffic"]["names"]
+
+
+def test_memsys_registry_view_tracks_axis():
+    from repro.ggpu.engine.memsys import MEMSYS_REGISTRY, get_memsys
+
+    assert sorted(MEMSYS_REGISTRY) == MEMSYS.names()
+    assert len(MEMSYS_REGISTRY) == len(MEMSYS)
+    assert "shared" in MEMSYS_REGISTRY
+    assert MEMSYS_REGISTRY["banked"] is MEMSYS.get("banked")
+    with pytest.raises(KeyError):
+        get_memsys("l3-victim")
+
+
+def test_bench_axis_serves_all_benches():
+    from repro.ggpu import programs
+
+    table = programs.all_benches()
+    # legacy insertion order is preserved for table/CSV stability
+    assert list(table) == ["mat_mul", "copy", "vec_mul", "fir", "div_int",
+                           "xcorr", "parallel_sel", "reduction"]
+    spec = BENCHES.get("copy")
+    b = spec.build(*spec.smoke_sizes)
+    assert b.name == "copy"
+
+
+def test_isa_only_bench_rejected_by_suite():
+    from repro.compiler.suite import kernel_def, suite_names
+
+    assert set(suite_names()) <= set(BENCHES.names())
+    with pytest.raises(KeyError):
+        kernel_def("no_such_bench")
+
+
+# ------------------------------------------- policies/routers behavior
+
+def _mixed_requests():
+    """A same-kernel copy pair, an odd shape, and a priority-1 request."""
+    from repro.serve import Request
+
+    reqs = []
+    for i, name in enumerate(("copy", "copy", "vec_mul", "div_int")):
+        spec = BENCHES.get(name)
+        b = spec.build(*spec.smoke_sizes)
+        reqs.append(Request(b.gpu_prog, b.gpu_mem, b.gpu_items, f"r{i}",
+                            priority=(1 if i == 3 else 0)))
+    return reqs
+
+
+def test_fifo_policy_preserves_submission_order():
+    """fifo ignores priority: strict submission order, folding only the
+    consecutive same-kernel pair into one cohort chunk."""
+    from repro.ggpu.engine import GGPUConfig
+
+    chunks = SCHEDULERS.get("fifo")(_mixed_requests(), GGPUConfig(), 4)
+    assert [tuple(c.members) for c in chunks] == [(0, 1), (2,), (3,)]
+
+
+def test_cohort_policy_is_default_and_priority_aware():
+    from repro.ggpu.engine import GGPUConfig
+    from repro.serve import Scheduler, plan_chunks
+
+    sched = Scheduler(GGPUConfig(), max_batch=4)
+    assert sched.policy == "cohort"
+    chunks = plan_chunks(_mixed_requests(), GGPUConfig(), 4)
+    # cohort plans by (priority desc, ...): the priority-1 request leads
+    assert tuple(chunks[0].members) == (3,)
+    # a policy may also be passed as a callable, bypassing the registry
+    assert Scheduler(GGPUConfig(), policy=plan_chunks)._plan is plan_chunks
+
+
+def test_round_robin_router_alternates_devices():
+    from repro.ggpu.engine import GGPUConfig
+    from repro.serve import Fleet
+
+    fleet = Fleet([("a", GGPUConfig(n_cus=1)), ("b", GGPUConfig(n_cus=1))],
+                  router="round-robin")
+    spec = BENCHES.get("copy")
+    b = spec.build(*spec.smoke_sizes)
+    for i in range(4):
+        fleet.submit(b.gpu_prog, b.gpu_mem, b.gpu_items, tag=f"t{i}")
+    results = fleet.drain()
+    placed = [r.info["device"] for r in results]
+    assert sorted(placed) == ["a", "a", "b", "b"]
+
+
+def test_router_accepts_instance_and_unknown_name_fails():
+    from repro.ggpu.engine import GGPUConfig
+    from repro.serve import Fleet, RoundRobinRouter
+
+    fleet = Fleet([("a", GGPUConfig())], router=RoundRobinRouter())
+    assert isinstance(fleet.router, RoundRobinRouter)
+    with pytest.raises(UnknownPluginError):
+        Fleet([("a", GGPUConfig())], router="no-such-router")
+
+
+# ------------------------------------------------------- CI matrices
+
+def test_smoke_matrix_covers_legacy_smoke_jobs():
+    from repro.registry.__main__ import smoke_matrix
+
+    m = smoke_matrix()
+    rows = {e["section"]: e for e in m["include"]}
+    assert {"dse", "serve", "compiler", "graph", "fleet"} <= set(rows)
+    assert "engine" not in rows                 # ci_smoke=False
+    assert rows["graph"]["check_args"] == "--section graph"
+    assert rows["graph"]["baseline"].endswith("BENCH_serve.json")
+    assert "device_count=8" in rows["fleet"]["xla_flags"]
+    assert rows["fleet"]["artifact_name"] == "BENCH_serve-sharded"
+    for e in m["include"]:
+        assert e["run_args"] and e["artifact"] and e["baseline"]
+    json.dumps(m)                               # must be JSON-clean
+
+
+def test_nightly_matrix_is_full_cross_product():
+    from repro.registry.__main__ import nightly_matrix
+
+    m = nightly_matrix()
+    cells = [e for e in m["include"] if e["kind"] == "cell"]
+    combos = {(e["memsys"], e["policy"], e["router"]) for e in cells}
+    want = len(MEMSYS) * len(SCHEDULERS) * len(ROUTERS)
+    assert len(cells) == len(combos) == want
+    sweeps = [e for e in m["include"] if e["kind"] == "sweep"]
+    assert any("--compiler" in e["run_args"] for e in sweeps)
+    assert all("--fast" not in e["run_args"] for e in sweeps)
+    json.dumps(m)
+
+
+def test_cli_selfcheck_passes():
+    from repro.registry.__main__ import main
+
+    assert main(["--selfcheck"]) == 0
