@@ -8,7 +8,9 @@ CI runs the ``dse-smoke`` / ``serve-smoke`` jobs, then::
 and fails the build on any violation, so a perf regression breaks CI
 instead of uploading quietly. The artifact kind is auto-detected from the
 ``schema`` field (``ggpu-dse/1`` / ``ggpu-serve/4`` / ``ggpu-compiler/2``
-— the compiler gate also re-enforces the absolute autotune invariants on
+/ ``ggpu-resilience/1`` — the resilience gate re-enforces the chaos
+invariants and compares the deterministic fault counts exactly;
+the compiler gate also re-enforces the absolute autotune invariants on
 the fresh artifact: tuned never worse than the default schedule anywhere,
 strictly better on >= 1 bench, all candidates oracle-verified). A fresh
 serve artifact carrying ``"sections": ["graph"]`` (the partial output of
@@ -49,6 +51,7 @@ from typing import List, Optional
 DSE_SCHEMA = "ggpu-dse/1"
 SERVE_SCHEMA = "ggpu-serve/4"
 COMPILER_SCHEMA = "ggpu-compiler/2"
+RESILIENCE_SCHEMA = "ggpu-resilience/1"
 
 
 def _band(violations: List[str], name: str, fresh, base, tol: float):
@@ -204,6 +207,38 @@ def check_serve(fresh: dict, base: dict, tol: float,
     return v
 
 
+def check_resilience(fresh: dict, base: dict, tol: float,
+                     host_tol: float) -> List[str]:
+    """The chaos-resilience gate: absolute invariants on the fresh
+    artifact (served-correctly floor, zero silent corruption, eviction
+    fired, hedged p99 beats unhedged) plus stability vs the baseline.
+    Fault decisions are pure hashes of (seed, kind, ticket, attempt), so
+    the seu/device-loss counts are deterministic at the committed seed
+    and compared exactly; wall-clock metrics get host ratio bands."""
+    from benchmarks.resilience_bench import invariant_problems
+
+    v: List[str] = []
+    _exact(v, "schema", fresh.get("schema"), base.get("schema"))
+    v += invariant_problems(fresh)
+    fs, bs = fresh.get("seu", {}), base.get("seu", {})
+    for key in ("n", "seed", "served", "served_correct", "quarantined",
+                "silently_corrupted", "injections"):
+        _exact(v, f"seu.{key}", fs.get(key), bs.get(key))
+    _ratio_band(v, "seu.goodput_ratio", fs.get("goodput_ratio"),
+                bs.get("goodput_ratio"), host_tol)
+    fd, bd = fresh.get("device_loss", {}), base.get("device_loss", {})
+    for key in ("n", "seed", "served", "lost", "quarantined", "evicted",
+                "bit_exact", "device_state"):
+        _exact(v, f"device_loss.{key}", fd.get(key), bd.get(key))
+    ft, bt = fresh.get("straggler", {}), base.get("straggler", {})
+    _exact(v, "straggler.n", ft.get("n"), bt.get("n"))
+    for leg in ("hedged", "unhedged"):
+        _ratio_band(v, f"straggler.{leg}.p99_ms",
+                    ft.get(leg, {}).get("p99_ms"),
+                    bt.get(leg, {}).get("p99_ms"), host_tol)
+    return v
+
+
 def check_compiler(fresh: dict, base: dict, tol: float,
                    host_tol: float) -> List[str]:
     from benchmarks.compiler_bench import autotune_invariants
@@ -269,6 +304,10 @@ def check_artifacts(fresh: dict, base: dict, tol: float = 0.25,
         return check_serve(fresh, base, tol, host_tol)
     if schema == COMPILER_SCHEMA:
         return check_compiler(fresh, base, tol, host_tol)
+    if schema == RESILIENCE_SCHEMA:
+        if section not in (None, "resilience"):
+            return [f"unknown resilience section {section!r}"]
+        return check_resilience(fresh, base, tol, host_tol)
     return [f"unknown baseline schema {schema!r}"]
 
 
@@ -286,9 +325,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "(default 3.0 — simulator speed varies across "
                          "runners)")
     ap.add_argument("--section", default=None,
-                    help="gate only one section of a serve artifact "
-                         "(currently: graph — the graph-smoke job's "
-                         "partial BENCH_graph.json)")
+                    help="gate only one section of an artifact "
+                         "(graph — the graph-smoke job's partial "
+                         "BENCH_graph.json; resilience — the "
+                         "resilience-smoke job's BENCH_resilience.json)")
     args = ap.parse_args(argv)
     with open(args.fresh) as f:
         fresh = json.load(f)

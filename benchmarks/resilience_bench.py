@@ -1,0 +1,373 @@
+"""Resilience benchmark (``python -m benchmarks.run --resilience``).
+
+Chaos-under-injection gates for the self-healing serving stack: every
+leg builds a two-device fleet from a registered ``FAULTS`` scenario
+(``repro.faults``) and proves the resilience machinery the scenario
+bundles actually absorbs the injected faults. Three legs, recorded in
+the standardized ``BENCH_resilience.json`` artifact (schema
+``ggpu-resilience/1``, path overridable via ``GGPU_RESILIENCE_OUT``):
+
+  * **seu** — a seeded trace under pre- and post-compute single-event
+    upsets, every request carrying an output-checksum audit. The gates:
+    the served-correctly fraction must stay >= ``MIN_SERVED_CORRECT``
+    (0.999), **zero** corrupted results may be served silently (every
+    corruption is retried or quarantined — the audit + ``ChecksumError``
+    retry path), and goodput under chaos must stay within
+    ``MIN_GOODPUT_RATIO`` of the same trace served fault-free (the
+    retry tax is bounded).
+  * **device_loss** — one device wedges permanently from its first
+    dispatch; the executor timeout surfaces it as ``DeviceTimeout``,
+    retries exhaust, the fleet evicts it and re-routes its backlog.
+    Gates: the device is evicted, nothing is lost, and every result is
+    bit-exact with the fault-free oracle (served entirely by the
+    survivor).
+  * **straggler** — the same open-loop Poisson trace replayed twice
+    under identical straggler injection: once with deadline-aware
+    hedging (duplicates fired onto the healthiest idle device after
+    ``hedge.after_s``, first result wins, the loser is abandoned in
+    flight) and once with hedging off. Gate: the hedged p99 beats the
+    unhedged p99 — tail insurance must actually pay.
+
+Every fault decision is a pure hash of ``(seed, kind, ticket,
+attempt)`` (``repro.faults.plan``), so the seu/device-loss counts in
+the artifact are deterministic at the committed seed and ``check_bench``
+compares them exactly; wall-clock metrics (goodput, p99s) get the usual
+host ratio bands. ``--fast`` shrinks the traces (the CI
+``resilience-smoke`` job, gated by ``check_bench --section
+resilience`` against ``benchmarks/baselines/BENCH_resilience.json``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+SCHEMA = "ggpu-resilience/1"
+SEED = 0
+# fraction of the chaos trace that must be served with bit-correct
+# results (quarantines and silent corruption both count against it)
+MIN_SERVED_CORRECT = 0.999
+# goodput under SEU chaos vs the same trace fault-free: the retry tax
+# must stay bounded (generous — host wall-clock on shared CI runners)
+MIN_GOODPUT_RATIO = 0.2
+
+
+def _fresh_mems(b, k, rng):
+    """k fresh memory images for bench ``b`` (same envelope, new data)."""
+    n = b.gpu_mem.shape[0]
+    return [np.concatenate([rng.integers(-100, 100,
+                                         2 * b.gpu_n).astype(np.int32),
+                            np.zeros(n - 2 * b.gpu_n, np.int32)])
+            for _ in range(k)]
+
+
+def _ref_scheduler():
+    from repro.ggpu.engine import GGPUConfig
+    from repro.serve import Scheduler
+
+    return Scheduler(GGPUConfig(n_cus=2), max_batch=8)
+
+
+def _reference(sched, b, mems):
+    """Fault-free oracle results for ``mems``, in submission order (one
+    shared scheduler so its compiled envelopes are reused)."""
+    tickets = [sched.submit(b.gpu_prog, m, b.gpu_items) for m in mems]
+    by = {r.info["ticket"]: r for r in sched.flush()}
+    return [by[t] for t in tickets]
+
+
+def _devices():
+    from repro.ggpu.engine import GGPUConfig
+    return [("dev0", GGPUConfig(n_cus=1)), ("dev1", GGPUConfig(n_cus=2))]
+
+
+def _serve_trace(fleet, b, mems, refs, audit):
+    """Serve ``mems`` through ``fleet`` (audited when asked), timing the
+    drain; returns (wall_s, correctness accounting vs ``refs``)."""
+    from repro.serve import Request, result_checksum
+
+    tickets = [fleet.submit_request(Request(
+        b.gpu_prog, m, b.gpu_items,
+        audit=result_checksum(ref.mem) if audit else None))
+        for m, ref in zip(mems, refs)]
+    t0 = time.perf_counter()
+    out = fleet.drain()
+    wall = time.perf_counter() - t0
+    by = {r.info["ticket"]: r for r in out}
+    correct = sum(
+        1 for t, ref in zip(tickets, refs) if t in by
+        and np.array_equal(np.asarray(by[t].mem), np.asarray(ref.mem)))
+    return {
+        "wall_s": wall,
+        "served": len(out),
+        "served_correct": correct,
+        "silently_corrupted": len(out) - correct,
+        "quarantined": len(fleet.quarantined),
+    }
+
+
+def bench_seu(emit, fast: bool) -> dict:
+    """SEU chaos vs the fault-free control over one identical trace."""
+    from repro.registry import FAULTS
+    from repro.ggpu import programs
+    from repro.serve import Fleet
+
+    b = programs._vec_mul(16, 128)
+    n = 24 if fast else 64
+    reps, warm_reps = 3, 2         # goodput: best of reps (host noise);
+    #                                warm passes retire the one-time jit
+    #                                compiles of the injected-path
+    #                                envelopes (patched cohorts, retry
+    #                                chunk sizes) before timing starts
+    rng = np.random.default_rng(11)
+    ref_sched = _ref_scheduler()
+
+    def trace():
+        m = _fresh_mems(b, n, rng)
+        return m, _reference(ref_sched, b, m)
+
+    def run(scenario):
+        fleet = Fleet(_devices(), max_batch=8,
+                      **scenario.fleet_kwargs())
+        for _ in range(warm_reps):
+            mems, refs = trace()
+            _serve_trace(fleet, b, mems, refs, scenario.audit)
+        total = {"served": 0, "served_correct": 0,
+                 "silently_corrupted": 0, "goodput_per_s": 0.0}
+        for _ in range(reps):
+            mems, refs = trace()
+            stats = _serve_trace(fleet, b, mems, refs, scenario.audit)
+            total["goodput_per_s"] = max(total["goodput_per_s"],
+                                         n / stats.pop("wall_s"))
+            for key in ("served", "served_correct", "silently_corrupted"):
+                total[key] += stats[key]
+        total["quarantined"] = len(fleet.quarantined)
+        return fleet, total
+
+    # the goodput control runs the SAME resilience machinery (resilient
+    # drain, audits, retry policy) under an inactive plan, so the ratio
+    # isolates the injection + retry tax rather than the cost of turning
+    # the machinery on (the default fast path is gated by the serve
+    # bench; injection-off fleets leave it byte-identical)
+    from repro.faults import FaultPlan
+
+    control_sc = FAULTS.get("seu")(seed=SEED)
+    control_sc.plan = FaultPlan(seed=SEED)
+    _, clean = run(control_sc)
+    chaos_sc = FAULTS.get("seu")(seed=SEED)
+    fleet, chaos = run(chaos_sc)
+    offered = reps * n
+    row = {
+        "kernel": b.name,
+        "n": offered,
+        "seed": SEED,
+        "injections": len(chaos_sc.decision_log()),
+        "served": chaos["served"],
+        "served_correct": chaos["served_correct"],
+        "served_correct_fraction": round(chaos["served_correct"] / offered,
+                                         6),
+        "silently_corrupted": chaos["silently_corrupted"],
+        "quarantined": chaos["quarantined"],
+        "clean_goodput_per_s": round(clean["goodput_per_s"], 2),
+        "chaos_goodput_per_s": round(chaos["goodput_per_s"], 2),
+        "goodput_ratio": round(chaos["goodput_per_s"]
+                               / clean["goodput_per_s"], 3),
+        "health": fleet.report()["health"],
+    }
+    emit("resilience/seu", 1e6 / row["chaos_goodput_per_s"],
+         f"served_correct={row['served_correct']}/{offered} "
+         f"injections={row['injections']} "
+         f"goodput_ratio={row['goodput_ratio']} "
+         f"quarantined={row['quarantined']}")
+    return row
+
+
+def bench_device_loss(emit, fast: bool) -> dict:
+    """Permanent device wedge: timeout -> eviction -> backlog re-route,
+    bit-exact completion on the survivor."""
+    from repro.registry import FAULTS
+    from repro.ggpu import programs
+    from repro.serve import Fleet
+
+    b = programs._vec_mul(16, 128)
+    n = 8 if fast else 16
+    rng = np.random.default_rng(13)
+    mems = _fresh_mems(b, n, rng)
+    refs = _reference(_ref_scheduler(), b, mems)
+    # stuck_after=0: wedged from the very first dispatch (uniform traffic
+    # folds into few cohorts, so a later wedge may never fire in a short
+    # trace); timeout_s is the detection latency the wall time pays
+    sc = FAULTS.get("device-loss")(seed=SEED, stuck_after=0,
+                                   timeout_s=0.2)
+    fleet = Fleet(_devices(), max_batch=8, **sc.fleet_kwargs())
+    t0 = time.perf_counter()
+    stats = _serve_trace(fleet, b, mems, refs, sc.audit)
+    wall = time.perf_counter() - t0
+    rep = fleet.report()
+    row = {
+        "kernel": b.name,
+        "n": n,
+        "seed": SEED,
+        "timeout_s": 0.2,
+        "served": stats["served"],
+        "bit_exact": stats["served_correct"] == stats["served"],
+        "lost": n - stats["served"] - stats["quarantined"],
+        "quarantined": stats["quarantined"],
+        "evicted": rep["device_state"]["dev0"] == "evicted",
+        "device_state": rep["device_state"],
+        "reroutes": rep["reroutes"],
+        "faults": rep["faults"],
+        "wall_s": round(wall, 4),
+    }
+    emit("resilience/device_loss", wall * 1e6 / n,
+         f"served={row['served']}/{n} evicted={row['evicted']} "
+         f"reroutes={row['reroutes']} bit_exact={row['bit_exact']}")
+    return row
+
+
+def bench_straggler(emit, fast: bool) -> dict:
+    """Hedged vs unhedged p99 over one open-loop trace under identical
+    straggler injection (module doc)."""
+    from repro.registry import FAULTS
+    from repro.ggpu import programs
+    from repro.serve import (Fleet, FleetResilience, Request,
+                             poisson_arrivals, replay)
+
+    b = programs._vec_mul(16, 128)
+    n = 24 if fast else 48
+    delay_s = 0.25
+    rng = np.random.default_rng(17)
+    mems = _fresh_mems(b, 16, rng)
+    arrivals = poisson_arrivals(60.0, n, seed=5)
+
+    def run(scenario):
+        fleet = Fleet(_devices(), max_batch=8,
+                      **scenario.fleet_kwargs())
+        # warm every cohort envelope open-loop traffic can produce so
+        # the replay never pays a jit compile (powers of two down to 1)
+        k = 8
+        while k >= 1:
+            for m in _fresh_mems(b, k, rng):
+                fleet.submit_request(Request(b.gpu_prog, m, b.gpu_items))
+            fleet.drain()
+            k //= 2
+        res = replay(fleet, arrivals,
+                     lambda i: Request(b.gpu_prog, mems[i % len(mems)],
+                                       b.gpu_items))
+        return fleet, res
+
+    hedged_sc = FAULTS.get("straggler")(seed=SEED, delay_s=delay_s)
+    unhedged_sc = FAULTS.get("straggler")(seed=SEED, delay_s=delay_s)
+    unhedged_sc.resilience = FleetResilience()   # same machinery, no hedge
+    hedged_fleet, hedged = run(hedged_sc)
+    _, unhedged = run(unhedged_sc)
+    row = {
+        "kernel": b.name,
+        "n": n,
+        "seed": SEED,
+        "arrivals": "poisson",
+        "straggler_delay_s": delay_s,
+        "hedges_fired": hedged_fleet.report()["hedged"],
+        "hedged": hedged.report(),
+        "unhedged": unhedged.report(),
+        "hedge_p99_speedup": round(unhedged.p99_ms / hedged.p99_ms, 3)
+        if hedged.p99_ms else 0.0,
+    }
+    emit("resilience/straggler/hedged", hedged.p99_ms * 1e3,
+         f"p99={hedged.p99_ms:.1f}ms hedges={row['hedges_fired']} "
+         f"served={hedged.served}/{n}")
+    emit("resilience/straggler/unhedged", unhedged.p99_ms * 1e3,
+         f"p99={unhedged.p99_ms:.1f}ms "
+         f"hedge_p99_speedup={row['hedge_p99_speedup']}x")
+    return row
+
+
+def invariant_problems(art: dict) -> list:
+    """Absolute health invariants of a resilience run — checked by
+    ``benchmarks.run`` after the artifact is written and re-enforced on
+    the fresh artifact by ``check_bench``."""
+    problems = []
+    s = art.get("seu", {})
+    frac = s.get("served_correct_fraction", 0)
+    if frac < MIN_SERVED_CORRECT:
+        problems.append(
+            f"seu.served_correct_fraction {frac} < {MIN_SERVED_CORRECT}: "
+            "the audit+retry machinery is not absorbing SEU chaos")
+    if s.get("silently_corrupted", 1):
+        problems.append(
+            f"seu.silently_corrupted {s.get('silently_corrupted')}: "
+            "corrupted results were served without being caught — the "
+            "checksum audit path is broken")
+    ratio = s.get("goodput_ratio", 0)
+    if ratio < MIN_GOODPUT_RATIO:
+        problems.append(
+            f"seu.goodput_ratio {ratio} < {MIN_GOODPUT_RATIO}: the retry "
+            "tax under chaos is unbounded")
+    d = art.get("device_loss", {})
+    if not d.get("evicted"):
+        problems.append(
+            "device_loss.evicted: the wedged device was never evicted — "
+            "timeout/eviction machinery is not firing")
+    if d.get("lost", 1):
+        problems.append(
+            f"device_loss.lost {d.get('lost')}: requests vanished during "
+            "eviction instead of being re-routed or quarantined")
+    if not d.get("bit_exact"):
+        problems.append(
+            "device_loss.bit_exact: results served around an eviction "
+            "diverge from the fault-free oracle")
+    st = art.get("straggler", {})
+    hp = st.get("hedged", {}).get("p99_ms", float("inf"))
+    up = st.get("unhedged", {}).get("p99_ms", 0)
+    if not hp < up:
+        problems.append(
+            f"straggler: hedged p99 {hp}ms is not below unhedged p99 "
+            f"{up}ms — hedging is not insuring the tail")
+    if not st.get("hedges_fired"):
+        problems.append("straggler.hedges_fired is 0: hedging never "
+                        "engaged under straggler injection")
+    for leg in ("hedged", "unhedged"):
+        served = st.get(leg, {}).get("served", 0)
+        if served != st.get("n", -1):
+            problems.append(
+                f"straggler.{leg}: served {served} != offered "
+                f"{st.get('n')} — the chaos replay lost requests")
+    return problems
+
+
+def bench_resilience(emit, fast: bool = False, out: str = None) -> dict:
+    """Run all three legs and write ``BENCH_resilience.json``; returns
+    the artifact dict."""
+    import jax
+
+    out = out or os.environ.get("GGPU_RESILIENCE_OUT",
+                                "BENCH_resilience.json")
+    seu = bench_seu(emit, fast)
+    device_loss = bench_device_loss(emit, fast)
+    straggler = bench_straggler(emit, fast)
+    art = {
+        "schema": SCHEMA,
+        "n_devices": jax.device_count(),
+        "seed": SEED,
+        "served_correct_fraction": seu["served_correct_fraction"],
+        "silently_corrupted": seu["silently_corrupted"]
+        + (0 if device_loss["bit_exact"] else 1),
+        "goodput_ratio": seu["goodput_ratio"],
+        "hedge_p99_speedup": straggler["hedge_p99_speedup"],
+        "seu": seu,
+        "device_loss": device_loss,
+        "straggler": straggler,
+    }
+    with open(out, "w") as f:
+        json.dump(art, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("resilience/artifact", 0.0, f"wrote {out}")
+    return art
+
+
+def run_resilience_section(emit, fast: bool = False) -> list:
+    """Registry section runner (``repro.registry`` SECTIONS
+    ``resilience``): run the chaos legs, return invariant violations."""
+    return invariant_problems(bench_resilience(emit, fast=fast))

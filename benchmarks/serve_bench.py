@@ -13,7 +13,10 @@ artifact (schema ``ggpu-serve/4``, path overridable via
     trace (first drain, which pays the jit compile) is reported
     separately from the steady-state rates; ``async_speedup`` is the
     steady-state ratio and must stay >= ``ASYNC_MIN_SPEEDUP`` (a smoke
-    invariant ``check_bench`` also enforces). Batch occupancy (launches
+    invariant ``check_bench`` also enforces — on hosts with >= 2 CPUs
+    only: with a single core there is no second core to overlap onto,
+    so the artifact records the ratio and ``host_cpus`` but the gate is
+    report-only). Batch occupancy (launches
     per compiled-stepper dispatch) and the executor trace-cache hit rate
     are measured on the async scheduler — repeat traffic must not
     re-trace.
@@ -504,12 +507,15 @@ def invariant_problems(art: dict) -> list:
             f"batch occupancy {art.get('batch_occupancy')} <= 1: the "
             "scheduler is not folding same-kernel launches")
     spd = art.get("async_speedup", 0)
-    if art.get("n_devices", 1) == 1 and spd < ASYNC_MIN_SPEEDUP:
+    if art.get("n_devices", 1) == 1 and art.get("host_cpus", 2) >= 2 \
+            and spd < ASYNC_MIN_SPEEDUP:
         # the async-vs-sync comparison measures host-pipelining overlap;
         # forcing multiple host devices (the fleet-smoke job) partitions
         # XLA's thread pool and perturbs exactly that overlap, so the
         # gate binds on the single-device job only — the multi-device
-        # job is gated on the sharded speedup instead
+        # job is gated on the sharded speedup instead. Below 2 host CPUs
+        # there is no second core to overlap onto, so the speedup is
+        # recorded in the artifact but not gated (report-only)
         problems.append(
             f"async_speedup {spd} < {ASYNC_MIN_SPEEDUP}: the pipelined "
             "async drain must beat the sync serial drain")
@@ -554,6 +560,7 @@ def bench_serve(emit, fast: bool = False, out: str = None) -> dict:
     art = {
         "schema": SCHEMA,
         "n_devices": jax.device_count(),
+        "host_cpus": os.cpu_count(),
         "launches_per_sec": throughput["launches_per_sec"],
         "sync_launches_per_sec": throughput["sync"]["launches_per_sec"],
         "async_speedup": throughput["async_speedup"],

@@ -1,0 +1,30 @@
+"""Deterministic fault injection for the G-GPU serving stack.
+
+Three layers (DESIGN.md §Fault injection & self-healing fleet):
+
+  * :mod:`repro.faults.plan` — ``FaultPlan``: a seed-keyed, stateless
+    chaos description whose every decision is a pure hash of
+    ``(seed, kind, ticket, attempt)`` — reproducible anywhere and
+    independent of chunk grouping or retry interleaving.
+  * :mod:`repro.faults.inject` — ``FaultInjector``: the transparent
+    executor wrapper that applies a plan at the dispatch boundary
+    (SEU bit flips via the engine's fused XOR patch path, straggler
+    holds, wedged devices surfacing as ``DeviceTimeout``).
+  * :mod:`repro.faults.scenarios` — the ``FAULTS`` registry axis
+    built-ins (``none``/``seu``/``straggler``/``device-loss``): named
+    ``FaultScenario`` bundles of a plan plus the serve-side resilience
+    knobs that answer it, pluggable into CI sweeps and chaos benches.
+
+Injection is strictly opt-in: nothing in this package touches the
+serving path unless an injector is interposed, and an inactive plan
+injects nothing — committed baselines stay byte-identical.
+"""
+from repro.faults.inject import FaultInjector
+from repro.faults.plan import FaultPlan
+from repro.faults.scenarios import (FaultScenario, device_loss, no_faults,
+                                    seu, straggler)
+
+__all__ = [
+    "FaultInjector", "FaultPlan", "FaultScenario",
+    "device_loss", "no_faults", "seu", "straggler",
+]

@@ -26,7 +26,8 @@ from repro.ggpu.engine.memsys import (MEMSYS_REGISTRY, BankedPerCUCache,
                                       get_memsys)
 from repro.ggpu.engine.stepper import (BlockPatch, KernelLaunchError,
                                        LaunchHandle,
-                                       MachineState, cohort_rows,
+                                       MachineState, XorBlockPatch,
+                                       cohort_rows,
                                        launch_shards,
                                        run_kernel, run_kernel_async,
                                        run_kernel_batch,
@@ -36,7 +37,8 @@ from repro.ggpu.engine.stepper import (BlockPatch, KernelLaunchError,
 
 __all__ = [
     "GGPUConfig", "ScalarConfig", "MachineState", "KernelLaunchError",
-    "LaunchHandle", "BlockPatch", "cohort_rows", "launch_shards",
+    "LaunchHandle", "BlockPatch", "XorBlockPatch", "cohort_rows",
+    "launch_shards",
     "run_kernel", "run_kernel_batch", "run_kernel_cohort",
     "run_kernel_async", "run_kernel_batch_async", "run_kernel_cohort_async",
     "exec_alu", "select_alu", "branch_taken",

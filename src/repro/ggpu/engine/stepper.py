@@ -433,10 +433,17 @@ Region = Optional[Tuple[int, int]]
 # compiled envelope nor the donation discipline. Two forms:
 #
 #   * per-launch: a sequence with one entry per launch, each ``None`` or a
-#     list of ``(dst_lo, dst_hi, src_array)`` tuples;
+#     list of ``(dst_lo, dst_hi, src_array)`` tuples (an optional fourth
+#     element ``"xor"`` flips bits instead of overwriting — the SEU
+#     injection form, see ``repro.faults``);
 #   * ``BlockPatch(lo, hi, block)``: one uniform region for every real
 #     launch of the chunk, ``block`` row ``j`` feeding launch ``j`` — a
-#     single fused device op, the chunk-to-chunk fast path.
+#     single fused device op, the chunk-to-chunk fast path;
+#   * ``XorBlockPatch(lo, hi, block)``: same shape contract, but XORed
+#     into the staged words rather than overwriting them. A zero row is a
+#     no-op, so a chunk-wide SEU plan stays one fused dispatch even when
+#     only a few launches are hit (bit-exact off-by-default: injection
+#     disabled means the patch is simply absent, not an identity op).
 
 
 class BlockPatch(NamedTuple):
@@ -448,9 +455,19 @@ class BlockPatch(NamedTuple):
     block: jax.Array
 
 
+class XorBlockPatch(NamedTuple):
+    """Like :class:`BlockPatch` but ``block`` row ``j`` is XORed into
+    launch ``j``'s words ``[lo, hi)`` — the fused single-event-upset
+    (bit-flip) injection primitive. Rows of zeros leave their launch
+    untouched."""
+    lo: int
+    hi: int
+    block: jax.Array
+
+
 def _check_patches(patches, B: int, sizes: Sequence[int]):
     """Validate patch bounds against each launch's own memory size."""
-    if isinstance(patches, BlockPatch):
+    if isinstance(patches, (BlockPatch, XorBlockPatch)):
         lo, hi, block = patches
         if not all(0 <= lo <= hi <= s for s in sizes[:B]):
             raise ValueError(f"block patch [{lo}, {hi}) outside a launch's "
@@ -464,7 +481,11 @@ def _check_patches(patches, B: int, sizes: Sequence[int]):
         raise ValueError(f"patches has {len(patches)} entries for "
                          f"{B} launches")
     for plist, size in zip(patches, sizes):
-        for lo, hi, src in (plist or ()):
+        for entry in (plist or ()):
+            lo, hi, src = entry[0], entry[1], entry[2]
+            if len(entry) > 3 and entry[3] not in ("set", "xor"):
+                raise ValueError(f"patch op must be 'set' or 'xor', "
+                                 f"got {entry[3]!r}")
             if not (0 <= lo <= hi <= size):
                 raise ValueError(f"patch [{lo}, {hi}) outside memory "
                                  f"image [0, {size})")
@@ -494,14 +515,43 @@ def _patch_flat_block(staged, block, msize, lo, hi):
     return jnp.concatenate([body.reshape(-1), staged[rows * msize:]])
 
 
+@functools.partial(jax.jit, static_argnames=("lo", "hi"),
+                   donate_argnums=(0,))
+def _xor_rows_block(body, block, lo, hi):
+    """Jitted ``XorBlockPatch`` application to a row-per-launch staging
+    buffer: bit-flips land as one compiled dispatch, same cost profile as
+    the dependency-feed ``BlockPatch`` fast path."""
+    region = body[:block.shape[0], lo:hi]
+    return body.at[:block.shape[0], lo:hi].set(region ^ block)
+
+
+@functools.partial(jax.jit, static_argnames=("msize", "lo", "hi"),
+                   donate_argnums=(0,))
+def _xor_flat_block(staged, block, msize, lo, hi):
+    """Jitted ``XorBlockPatch`` application to a flat cohort/single
+    staging buffer."""
+    rows = (staged.shape[0] - 1) // msize
+    body = staged[:rows * msize].reshape(rows, msize)
+    region = body[:block.shape[0], lo:hi]
+    body = body.at[:block.shape[0], lo:hi].set(region ^ block)
+    return jnp.concatenate([body.reshape(-1), staged[rows * msize:]])
+
+
 def _patch_rows(body: jax.Array, patches) -> jax.Array:
     """Apply patches to a row-per-launch view of the staged memory."""
+    if isinstance(patches, XorBlockPatch):
+        lo, hi, block = patches
+        return _xor_rows_block(body, block, lo=lo, hi=hi)
     if isinstance(patches, BlockPatch):
         lo, hi, block = patches
         return _patch_rows_block(body, block, lo=lo, hi=hi)
     for i, plist in enumerate(patches):
-        for lo, hi, src in (plist or ()):
-            body = body.at[i, lo:hi].set(src)
+        for entry in (plist or ()):
+            lo, hi, src = entry[0], entry[1], entry[2]
+            if len(entry) > 3 and entry[3] == "xor":
+                body = body.at[i, lo:hi].set(body[i, lo:hi] ^ src)
+            else:
+                body = body.at[i, lo:hi].set(src)
     return body
 
 
@@ -510,6 +560,9 @@ def _patch_flat(staged: jax.Array, msize: int, patches) -> jax.Array:
     Padding rows (copies of the first image) stay unpatched — they are
     sliced away at resolution and each launch is isolated, so they are
     never observable."""
+    if isinstance(patches, XorBlockPatch):
+        lo, hi, block = patches
+        return _xor_flat_block(staged, block, msize=msize, lo=lo, hi=hi)
     if isinstance(patches, BlockPatch):
         lo, hi, block = patches
         return _patch_flat_block(staged, block, msize=msize, lo=lo, hi=hi)
@@ -786,7 +839,8 @@ def run_kernel_async(prog: np.ndarray, mem0: np.ndarray, n_items: int,
     staged = _stage([mem0])
     if patches is not None:
         msize = mem0.shape[0]
-        per_launch = (patches if isinstance(patches, BlockPatch)
+        per_launch = (patches
+                      if isinstance(patches, (BlockPatch, XorBlockPatch))
                       else [list(patches)])
         _check_patches(per_launch, 1, [msize])
         staged = _patch_flat(staged, msize, per_launch)

@@ -1,6 +1,6 @@
 """Unified scenario registry: every pluggable axis of the system.
 
-One introspectable surface (DESIGN.md §Scenario registry) spanning six
+One introspectable surface (DESIGN.md §Scenario registry) spanning seven
 axes, each an :class:`~repro.registry.core.Axis` whose built-ins
 register themselves from the named provider modules on first query:
 
@@ -23,6 +23,10 @@ register themselves from the named provider modules on first query:
   ``TRAFFIC``     arrival-trace generator:                 repro.serve.
                   ``(n, seed=0) -> np.ndarray`` of         loadgen
                   seconds-from-start times
+  ``FAULTS``      chaos-scenario factory:                  repro.faults.
+                  ``(seed=0, **kw) -> FaultScenario``      scenarios
+                  (a FaultPlan + the serve-side
+                  resilience knobs that answer it)
   ``SECTIONS``    :class:`~repro.registry.sections.        repro.registry.
                   BenchSection` (a benchmark-harness       sections
                   section + its CI smoke leg metadata)
@@ -66,6 +70,11 @@ TRAFFIC = Axis(
     doc="open-loop arrival-trace generators",
     providers=("repro.serve.loadgen",))
 
+FAULTS = Axis(
+    "fault",
+    doc="deterministic chaos scenarios (FaultScenario factories)",
+    providers=("repro.faults.scenarios",))
+
 SECTIONS = Axis(
     "section",
     doc="benchmark-harness sections and their CI smoke legs",
@@ -80,14 +89,17 @@ AXES = {
     "schedulers": SCHEDULERS,
     "routers": ROUTERS,
     "traffic": TRAFFIC,
+    "faults": FAULTS,
     "sections": SECTIONS,
 }
 
 SCENARIO_AXES = {k: AXES[k] for k in
-                 ("benches", "memsys", "schedulers", "routers", "traffic")}
+                 ("benches", "memsys", "schedulers", "routers", "traffic",
+                  "faults")}
 
 __all__ = [
-    "AXES", "BENCHES", "MEMSYS", "ROUTERS", "SCENARIO_AXES", "SCHEDULERS",
+    "AXES", "BENCHES", "FAULTS", "MEMSYS", "ROUTERS", "SCENARIO_AXES",
+    "SCHEDULERS",
     "SECTIONS", "TRAFFIC", "Axis", "DuplicateNameError", "RegistryError",
     "UnknownPluginError",
 ]

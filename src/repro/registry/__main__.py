@@ -13,18 +13,19 @@ Modes (exactly one):
           registered bench section with ``ci_smoke=True`` (run args,
           artifact/baseline paths, gate args, XLA flags).
         * ``nightly`` — the scenario cross-product: one cell per
-          (memsys, policy, router) combination (each cell replays every
-          registered traffic pattern over every bench), plus one
-          full-sweep leg per artifact section (``run_args`` with
-          ``--fast`` stripped).
+          (memsys, policy, router, fault) combination (each cell
+          replays every registered traffic pattern over every bench,
+          under the named chaos scenario), plus one full-sweep leg per
+          artifact section (``run_args`` with ``--fast`` stripped).
   ``--selfcheck``
       Discover every axis; exit non-zero on import errors, duplicate
       names (both raise), or an empty axis.
   ``--smoke``
       ``--selfcheck`` plus one minimal launch per registered scenario
       (the PR-blocking ``registry-smoke`` CI job).
-  ``--run-cell MEMSYS POLICY ROUTER``
-      Execute one nightly cross-product cell.
+  ``--run-cell MEMSYS POLICY ROUTER [FAULT]``
+      Execute one nightly cross-product cell (``FAULT`` names a
+      ``FAULTS`` scenario; default ``none``).
 
 Adding a scenario in a drop-in file under ``repro/registry/plugins/``
 changes these outputs — and therefore the CI matrices — with no
@@ -58,12 +59,14 @@ def nightly_matrix() -> dict:
     for ms in AXES["memsys"].names():
         for pol in AXES["schedulers"].names():
             for rt in AXES["routers"].names():
-                include.append({
-                    "kind": "cell",
-                    "memsys": ms, "policy": pol, "router": rt,
-                    "xla_flags": "",
-                    "name": f"cell-{ms}-{pol}-{rt}",
-                })
+                for ft in AXES["faults"].names():
+                    include.append({
+                        "kind": "cell",
+                        "memsys": ms, "policy": pol, "router": rt,
+                        "fault": ft,
+                        "xla_flags": "",
+                        "name": f"cell-{ms}-{pol}-{rt}-{ft}",
+                    })
     seen = set()
     for s in _sections():
         # one full (non --fast) sweep per distinct run; the fleet
@@ -114,10 +117,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     mode.add_argument("--smoke", action="store_true",
                       help="selfcheck + one minimal launch per "
                            "registered scenario")
-    mode.add_argument("--run-cell", nargs=3,
-                      metavar=("MEMSYS", "POLICY", "ROUTER"),
-                      help="run one nightly cross-product cell")
+    mode.add_argument("--run-cell", nargs="+",
+                      metavar="MEMSYS POLICY ROUTER [FAULT]",
+                      help="run one nightly cross-product cell "
+                           "(FAULT defaults to 'none')")
     args = ap.parse_args(argv)
+    if args.run_cell is not None and len(args.run_cell) not in (3, 4):
+        ap.error("--run-cell takes MEMSYS POLICY ROUTER [FAULT]")
 
     def emit(line: str) -> None:
         print(line)
@@ -138,8 +144,9 @@ def main(argv: Optional[List[str]] = None) -> int:
         if args.smoke and not problems:
             problems += smoke_mod.smoke_all(emit)
     else:
-        ms, pol, rt = args.run_cell
-        problems = smoke_mod.run_cell(ms, pol, rt, emit)
+        ms, pol, rt = args.run_cell[:3]
+        fault = args.run_cell[3] if len(args.run_cell) > 3 else "none"
+        problems = smoke_mod.run_cell(ms, pol, rt, emit, fault=fault)
     for p in problems:
         print(f"REGISTRY PROBLEM: {p}", file=sys.stderr)
     return 1 if problems else 0

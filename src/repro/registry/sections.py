@@ -101,6 +101,21 @@ SECTIONS.register("graph", BenchSection(
     check_args=("--section", "graph"),
     gate_sections=("graph",)))
 
+# chaos gates: the PR-blocking resilience-smoke job — SEU audits +
+# retry, device eviction + re-route, hedged-vs-unhedged straggler p99 —
+# gated against its own committed baseline (fault decisions are
+# deterministic at the committed seed, so counts compare exactly)
+SECTIONS.register("resilience", BenchSection(
+    name="resilience", flag="--resilience",
+    runner="benchmarks.resilience_bench:run_resilience_section",
+    description="fault-injection chaos gates: SEU audit+retry, device "
+                "eviction, hedged straggler p99 (BENCH_resilience.json)",
+    run_args="--resilience --fast",
+    artifact="BENCH_resilience.json", artifact_name="BENCH_resilience",
+    baseline=f"{_BASELINES}/BENCH_resilience.json",
+    check_args=("--section", "resilience"),
+    gate_sections=("resilience",)))
+
 # the serve section again under 8 simulated host devices: the leg that
 # exercises real mesh sharding and the >= 1.5x sharded throughput gate
 SECTIONS.register("fleet", BenchSection(

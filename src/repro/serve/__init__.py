@@ -8,9 +8,10 @@ slot-batched LLM engine. See DESIGN.md §Serving subsystem.
 ``repro.serve.engine`` is the stable compatibility facade; the package
 modules are the API for new code.
 """
-from repro.serve.executors import (Executor, ExecutorStats, PendingChunk,
-                                   get_executor, sim_key)
-from repro.serve.fleet import Fleet, FleetDevice, pinned_makespan
+from repro.serve.executors import (DeviceTimeout, Executor, ExecutorStats,
+                                   PendingChunk, get_executor, sim_key)
+from repro.serve.fleet import (Fleet, FleetDevice, FleetResilience,
+                               HedgePolicy, pinned_makespan)
 from repro.serve.graphs import (GraphTickets, extract_outputs,
                                 run_chains_host_staged, run_program,
                                 run_program_host_staged,
@@ -20,23 +21,30 @@ from repro.serve.llm import Engine, EngineConfig
 from repro.serve.loadgen import (LoadResult, bursty_arrivals,
                                  poisson_arrivals, replay)
 from repro.serve.policies import plan_fifo
-from repro.serve.request import Dep, KernelLaunch, Request, Result
+from repro.serve.request import (Dep, KernelLaunch, Request, Result,
+                                 result_checksum)
 from repro.serve.routing import EarliestFinishRouter, RoundRobinRouter
-from repro.serve.scheduler import (AdmissionError, Chunk, DependencyError,
-                                   LaunchQueue, Quarantined, Scheduler,
+from repro.serve.scheduler import (AdmissionError, ChecksumError, Chunk,
+                                   DeadlineExceeded, DependencyError,
+                                   LaunchQueue, Quarantined, RetryPolicy,
+                                   Scheduler,
                                    plan_chunks, plan_waves, wavefronts)
 
 __all__ = [
-    "AdmissionError", "Chunk", "Dep", "DependencyError",
+    "AdmissionError", "ChecksumError", "Chunk", "DeadlineExceeded", "Dep",
+    "DependencyError", "DeviceTimeout",
     "EarliestFinishRouter", "Engine",
     "EngineConfig", "Executor", "ExecutorStats", "Fleet", "FleetDevice",
-    "GraphTickets", "KernelLaunch", "LaunchQueue", "LoadResult",
-    "PendingChunk", "Quarantined", "Request", "Result", "RoundRobinRouter",
+    "FleetResilience",
+    "GraphTickets", "HedgePolicy", "KernelLaunch", "LaunchQueue",
+    "LoadResult",
+    "PendingChunk", "Quarantined", "Request", "Result", "RetryPolicy",
+    "RoundRobinRouter",
     "Scheduler",
     "bursty_arrivals", "extract_outputs", "get_executor",
     "pinned_makespan", "plan_chunks", "plan_fifo", "plan_waves",
     "poisson_arrivals",
-    "replay", "run_chains_host_staged", "run_program",
+    "replay", "result_checksum", "run_chains_host_staged", "run_program",
     "run_program_host_staged",
     "run_programs_host_staged", "sim_key", "submit_program",
     "submit_programs", "wavefronts",

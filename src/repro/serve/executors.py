@@ -49,17 +49,34 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence
 
 import jax
 
-from repro.ggpu.engine import (BlockPatch, GGPUConfig, LaunchHandle,
+from repro.ggpu.engine import (BlockPatch, GGPUConfig, KernelLaunchError,
+                               LaunchHandle, XorBlockPatch,
                                cohort_rows, launch_shards)
 from repro.ggpu.engine import (run_kernel_async, run_kernel_batch_async,
                                run_kernel_cohort_async)
 from repro.ggpu.engine.stepper import _n_wavefronts
 
 from repro.serve.request import Request, Result
+
+
+class DeviceTimeout(KernelLaunchError):
+    """A dispatched chunk did not resolve within the executor's
+    ``timeout_s`` — the stuck-device failure mode (DESIGN.md §Fault
+    injection). ``index`` is ``None``: the whole chunk is suspect, every
+    member is retried or quarantined by the scheduler. ``device_fault``
+    marks it as the *device's* failure (not the program's), which is what
+    a fleet counts toward eviction and re-routes to survivors."""
+
+    device_fault = True
+
+    def __init__(self, message: str, index: Optional[int] = None):
+        super().__init__(message, 0 if index is None else index)
+        self.index = index
 
 
 @dataclasses.dataclass
@@ -103,12 +120,15 @@ def sim_key(cfg: GGPUConfig) -> GGPUConfig:
 
 @dataclasses.dataclass
 class PendingChunk:
-    """One dispatched chunk in flight on the device, awaiting collection."""
+    """One dispatched chunk in flight on the device, awaiting collection.
+    ``t_dispatch`` is the wall clock at dispatch — the reference point for
+    executor timeouts and fleet-level hedging."""
     handle: LaunchHandle
     kind: str
     reqs: List[Request]
     env: tuple
     traced: bool
+    t_dispatch: float = 0.0
 
 
 class Executor:
@@ -124,12 +144,17 @@ class Executor:
 
     def __init__(self, cfg: GGPUConfig, *,
                  share: Optional["Executor"] = None,
-                 mesh=None, device=None):
+                 mesh=None, device=None,
+                 timeout_s: Optional[float] = None):
         self.cfg = cfg                    # reporting config (true freq)
         self.sim_cfg = sim_key(cfg)       # engine/compile config
         self.mesh = mesh
         self.device = device
         self.shards = launch_shards(mesh)
+        # wall-clock budget a dispatched chunk gets before ``collect``
+        # gives up with ``DeviceTimeout`` (None: wait forever — the
+        # pre-fault-model behavior, and the default)
+        self.timeout_s = timeout_s
         if share is None:
             self.stats = ExecutorStats()
             self.memo: Dict[tuple, object] = {}  # e.g. the DSE cycle cache
@@ -210,7 +235,10 @@ class Executor:
                 # normalize the chunk-level patch forms down to the
                 # single-launch flat list the engine entry point takes
                 single = None
-                if isinstance(patches, BlockPatch):
+                if isinstance(patches, XorBlockPatch):
+                    single = [(patches.lo, patches.hi, patches.block[0],
+                               "xor")]
+                elif isinstance(patches, BlockPatch):
                     single = [(patches.lo, patches.hi, patches.block[0])]
                 elif patches is not None:
                     single = patches[0]
@@ -218,7 +246,13 @@ class Executor:
                     reqs[0].prog, reqs[0].mem0, reqs[0].n_items, cfg,
                     out_region=regions[0] if regions else None,
                     patches=single)
-        return PendingChunk(h, kind, reqs, env, traced)
+        return PendingChunk(h, kind, reqs, env, traced,
+                            t_dispatch=time.monotonic())
+
+    def chunk_ready(self, pending: PendingChunk) -> bool:
+        """Non-blocking: has the device finished this chunk? (The hook a
+        fault injector overrides to model stuck devices and stragglers.)"""
+        return pending.handle.ready()
 
     def collect(self, pending: PendingChunk) -> List[Result]:
         """Resolve a dispatched chunk into per-launch ``Result``s in the
@@ -227,7 +261,18 @@ class Executor:
         failing position) when a launch did not halt — stat counters move
         on successful collections only, preserving hits + misses ==
         dispatches (a failed chunk is retried with fewer members, a
-        different envelope)."""
+        different envelope). With ``timeout_s`` set, a chunk still
+        unresolved ``timeout_s`` after its dispatch raises
+        ``DeviceTimeout`` (``index=None``: the whole chunk is suspect)."""
+        if self.timeout_s is not None:
+            deadline = pending.t_dispatch + self.timeout_s
+            while not self.chunk_ready(pending):
+                now = time.monotonic()
+                if now >= deadline:
+                    raise DeviceTimeout(
+                        f"chunk of {len(pending.reqs)} launch(es) not "
+                        f"resolved within {self.timeout_s}s of dispatch")
+                time.sleep(min(1e-3, deadline - now))
         outs = pending.handle.results()
         if pending.traced:
             self.stats.trace_hits += 1

@@ -51,19 +51,54 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.ggpu.engine import GGPUConfig
+from repro.ggpu.engine import GGPUConfig, KernelLaunchError
+from repro.serve.executors import Executor
 from repro.serve.request import Request, Result
-from repro.serve.scheduler import Quarantined, Scheduler, wavefronts
+from repro.serve.scheduler import (Quarantined, RetryPolicy, Scheduler,
+                                   wavefronts)
+
+
+@dataclasses.dataclass(frozen=True)
+class HedgePolicy:
+    """Deadline-aware hedged dispatch: once a dispatched chunk has been
+    in flight longer than ``after_s`` wall-clock seconds, each of its
+    dependency-free members is *duplicated* onto the healthiest idle
+    routable device. First result wins the fleet ticket; the loser's
+    result (or its eventual quarantine) is discarded at collect. At most
+    one hedge per fleet ticket."""
+    after_s: float = 0.05
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetResilience:
+    """Self-healing fleet policy (DESIGN.md §Fault injection &
+    self-healing fleet). ``evict_after`` consecutive device faults
+    (``DeviceTimeout``/``ChecksumError`` quarantines, i.e. failures blamed
+    on the *device*, not the program) evict a device: its dependency-free
+    backlog is re-routed to the survivors, everything else is quarantined,
+    and the mesh effectively shrinks. After ``probation_after`` further
+    drains the device is re-admitted **on probation** — routable for at
+    most ``probation_budget`` requests — and promoted back to active after
+    a clean drain, or re-evicted on its first new fault. ``hedge``
+    optionally enables straggler hedging (:class:`HedgePolicy`)."""
+    evict_after: int = 3
+    probation_after: int = 2
+    probation_budget: int = 4
+    hedge: Optional[HedgePolicy] = None
 
 
 @dataclasses.dataclass
 class FleetDevice:
     """One config in the fleet, with its scheduler and load accounting.
-    ``mesh``/``device`` record the physical binding (either or neither)."""
+    ``mesh``/``device`` record the physical binding (either or neither).
+    The health fields move only under a :class:`FleetResilience` policy:
+    ``state`` walks active -> evicted -> probation -> active, ``faults``
+    counts device-blamed quarantines, ``served`` successful results."""
     name: str
     cfg: GGPUConfig
     scheduler: Scheduler
@@ -71,6 +106,21 @@ class FleetDevice:
     busy_us: float = 0.0       # actual modeled service time after drain
     mesh: object = None        # sub-mesh when bound to >1 physical device
     device: object = None      # pinned jax.Device when bound to exactly 1
+    state: str = "active"      # active | evicted | probation
+    served: int = 0            # successful results (health numerator)
+    faults: int = 0            # device-blamed quarantines (lifetime)
+    consecutive_faults: int = 0  # reset by any successful result
+    evicted_at: int = -1       # fleet drain counter at eviction
+    probation_left: int = 0    # admission budget while on probation
+
+    @property
+    def health(self) -> float:
+        """Smoothed success fraction in (0, 1]: ``(1 + served) /
+        (1 + served + 4 * faults)`` — the +1 prior keeps a cold device
+        routable, the 4x fault weight makes one fault cost four serves
+        to win back (hedging and re-routing prefer high-health
+        devices)."""
+        return (1.0 + self.served) / (1.0 + self.served + 4.0 * self.faults)
 
 
 def _mesh_slices(mesh, n: int) -> List[list]:
@@ -100,7 +150,11 @@ class Fleet:
     """
 
     def __init__(self, configs: Sequence, max_batch: int = 64, *,
-                 mesh=None, router="earliest-finish", policy="cohort"):
+                 mesh=None, router="earliest-finish", policy="cohort",
+                 resilience: Optional[FleetResilience] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 timeout_s: Optional[float] = None,
+                 executor_wrap: Optional[Callable] = None):
         configs = list(configs)
         slices = _mesh_slices(mesh, len(configs)) if mesh is not None \
             else [[] for _ in configs]
@@ -114,13 +168,26 @@ class Fleet:
                                              ("data",))
             elif len(slices[i]) == 1:
                 sub_dev = slices[i][0]
+            # the scheduler's private executor is built here (identical
+            # to what Scheduler(cfg, ...) would build) so a caller's
+            # ``executor_wrap(name, executor)`` hook — e.g. a
+            # ``repro.faults.FaultInjector`` — can interpose per device
+            ex = Executor(cfg, mesh=sub_mesh, device=sub_dev,
+                          timeout_s=timeout_s)
+            if executor_wrap is not None:
+                ex = executor_wrap(name, ex) or ex
             self.devices.append(FleetDevice(
                 name, cfg,
-                Scheduler(cfg, max_batch=max_batch, mesh=sub_mesh,
-                          device=sub_dev, policy=policy),
+                Scheduler(executor=ex, max_batch=max_batch, policy=policy,
+                          retry=retry),
                 mesh=sub_mesh, device=sub_dev))
         if len(self.devices) < 1:
             raise ValueError("fleet needs at least one device")
+        self.resilience = resilience
+        self._drains = 0                 # drain calls (probation clock)
+        self._served_tickets: set = set()   # fleet tickets with a result
+        self._hedged: set = set()           # fleet tickets hedged once
+        self._reroutes: Dict[int, int] = {}  # fleet ticket -> re-routes
         # routing strategy: a registered name resolves to a router class
         # on the ROUTERS axis; classes are instantiated per fleet
         # (routers may carry state), prebuilt instances pass through
@@ -178,6 +245,21 @@ class Fleet:
 
     # -- routing -------------------------------------------------------------
 
+    def routable_devices(self) -> List[FleetDevice]:
+        """The devices a router may place fresh work on: all of them
+        without a resilience policy; otherwise the active ones plus
+        probation devices with admission budget left. Falls back to
+        not-evicted (then to everything) rather than going empty — a
+        fully-degraded fleet still routes somewhere instead of
+        crashing."""
+        if self.resilience is None:
+            return list(self.devices)
+        out = [d for d in self.devices
+               if d.state == "active"
+               or (d.state == "probation" and d.probation_left > 0)]
+        return out or [d for d in self.devices if d.state != "evicted"] \
+            or list(self.devices)
+
     def submit(self, prog: np.ndarray, mem0: np.ndarray, n_items: int,
                tag: str = "", priority: int = 0,
                deadline_us: float = math.inf) -> int:
@@ -217,6 +299,8 @@ class Fleet:
                 for d in req.deps)
         else:
             dev = self.router.pick(self, req)
+        if dev.state == "probation":
+            dev.probation_left -= 1
         est = self.estimate_us(dev, req) * self._shard_scale(dev)
         local = dev.scheduler.submit_request(req)
         dev.eta_us += est
@@ -240,7 +324,14 @@ class Fleet:
         router charged at submit time, so cold-start error never skews
         later placements) and the learned per-kernel model. Launches the
         device scheduler quarantined surface in ``Fleet.quarantined``
-        under their fleet ticket — they produce no result."""
+        under their fleet ticket — they produce no result.
+
+        Under a :class:`FleetResilience` policy the drain switches to the
+        readiness-ordered self-healing loop (``_drain_resilient``);
+        without one this is the original dispatch-all-then-collect path,
+        unchanged."""
+        if self.resilience is not None:
+            return self._drain_resilient(budget)
         for dev in self.devices:
             dev.scheduler.dispatch(budget)
         out: List[Result] = []
@@ -267,6 +358,244 @@ class Fleet:
         out.sort(key=lambda r: r.info["ticket"])
         return out
 
+    # -- self-healing drain (FleetResilience) --------------------------------
+
+    def _drain_resilient(self, budget: Optional[int] = None) -> List[Result]:
+        """The readiness-ordered drain loop: dispatch every live device,
+        then settle whichever chunks are resolvable *anywhere* — a
+        straggling device never serializes the others' collections. Each
+        pass harvests device-blamed quarantines into the health counters,
+        re-routes dependency-free failures to the healthiest survivor,
+        evicts devices past ``evict_after`` consecutive faults (re-routing
+        their backlog), and fires straggler hedges. ``budget`` applies per
+        device per dispatch pass. The loop exits when every fleet ticket
+        is settled or quarantined — NOT when every chunk has resolved: a
+        hedge loser still in flight is *abandoned* here and discarded by
+        a later drain's collect, so a straggling duplicate never holds
+        the drain (and the caller's admission loop) hostage. Probation
+        bookkeeping brackets the loop: eviction cooldowns expire on
+        entry, clean probation devices are promoted on exit."""
+        r = self.resilience
+        self._drains += 1
+        for dev in self.devices:
+            if dev.state == "evicted" \
+                    and self._drains - dev.evicted_at > r.probation_after:
+                dev.state = "probation"
+                dev.probation_left = r.probation_budget
+                dev.consecutive_faults = 0
+        start_served = {d.name: d.served for d in self.devices}
+        out: List[Result] = []
+        while True:
+            live = [d for d in self.devices if d.state != "evicted"]
+            for dev in live:
+                dev.scheduler.dispatch(budget)
+            progress = False
+            for dev in live:
+                if dev.state == "evicted":
+                    continue  # evicted by an earlier harvest this pass
+                got = dev.scheduler.collect_ready()
+                if got:
+                    progress = True
+                self._settle(dev, got, out)
+                self._harvest(dev, out)
+            if not self._unsettled():
+                break  # abandoned hedge losers may remain in flight
+            if self._maybe_hedge():
+                progress = True
+            if not progress:
+                live = [d for d in self.devices if d.state != "evicted"]
+                if not any(d.scheduler.inflight_chunks
+                           or len(d.scheduler) for d in live):
+                    break  # unresolved tickets with nowhere left to run
+                # nothing resolvable anywhere: poll rather than block on
+                # one device, so a hedge winner elsewhere is settled the
+                # moment it finishes (blocking on the oldest chunk would
+                # hand the straggler the race by default)
+                time.sleep(1e-3)
+        for dev in self.devices:
+            if dev.state == "probation" and dev.consecutive_faults == 0 \
+                    and dev.served > start_served[dev.name]:
+                dev.state = "active"
+        out.sort(key=lambda r: r.info["ticket"])
+        return out
+
+    def _unsettled(self) -> bool:
+        """Any fleet ticket not yet settled or finally quarantined? (The
+        resilient drain's exit condition — a hedge loser's in-flight
+        chunk does not count, so it cannot block the drain.)"""
+        return any(t not in self._served_tickets
+                   and t not in self.quarantined for t in self.placement)
+
+    def _settle(self, dev: FleetDevice, results: List[Result],
+                out: List[Result]) -> None:
+        """Account device-local results into the fleet surface (the
+        resilient-path twin of the default drain's collect loop). The
+        first result for a fleet ticket wins; a hedge loser's result is
+        discarded here — 'cancelled at collect'. Each winner is stamped
+        with ``info['settled_s']`` (monotonic settle time) so an
+        open-loop driver can measure when the result actually landed
+        rather than when the whole drain returned."""
+        for res in results:
+            local = res.info["ticket"]
+            ticket = self._tickets[(dev.name, local)]
+            if ticket in self._served_tickets:
+                continue  # hedge loser: the duplicate already won
+            self._served_tickets.add(ticket)
+            res.info["settled_s"] = time.monotonic()
+            t_us = res.info["cycles"] / dev.cfg.freq_mhz
+            dev.busy_us += t_us
+            res.info["device"] = dev.name
+            res.info["ticket"] = ticket
+            kk, sched_label = self._kernel_keys[ticket]
+            self._learned[(dev.name, kk, sched_label)] = t_us
+            scaled = t_us * self._shard_scale(dev)
+            dev.eta_us += scaled - self._eta_charged.pop(ticket, scaled)
+            dev.served += 1
+            dev.consecutive_faults = 0
+            out.append(res)
+
+    def _harvest(self, dev: FleetDevice, out: List[Result]) -> None:
+        """Drain a device scheduler's quarantine surface into the fleet:
+        device-blamed errors (``device_fault``) move the health counters
+        and — for dependency-free requests with re-route budget left —
+        send the request to the healthiest other device instead of a
+        final quarantine. Ends with the eviction check: ``evict_after``
+        consecutive faults (a single fault on probation) retire the
+        device."""
+        sched = dev.scheduler
+        for local in list(sched.quarantined):
+            q = sched.quarantined.pop(local)
+            ticket = self._tickets[(dev.name, local)]
+            fault = getattr(type(q.error), "device_fault", False)
+            if fault:
+                dev.faults += 1
+                dev.consecutive_faults += 1
+            dev.eta_us -= self._eta_charged.pop(ticket, 0.0)
+            if ticket in self._served_tickets or ticket in self.quarantined:
+                continue  # a hedge (or an earlier pass) already settled it
+            target = None
+            if fault and not q.request.deps and self._reroutes.get(
+                    ticket, 0) < max(1, len(self.devices) - 1):
+                target = self._healthiest(exclude=dev)
+            if target is not None:
+                self._resubmit(ticket, q.request, target)
+            else:
+                self.quarantined[ticket] = q
+        if dev.state != "evicted" and dev.consecutive_faults >= \
+                (1 if dev.state == "probation" else
+                 self.resilience.evict_after):
+            self._evict(dev, out)
+
+    def _resubmit(self, ticket: int, req: Request,
+                  target: FleetDevice) -> None:
+        """Re-route a request to ``target`` under its existing fleet
+        ticket (fresh local ticket, fresh retry budget; the admission
+        stamp survives, so a deadline keeps counting)."""
+        self._reroutes[ticket] = self._reroutes.get(ticket, 0) + 1
+        req.ticket = -1
+        req.attempts = 0
+        local = target.scheduler.submit_request(req)
+        if target.state == "probation":
+            target.probation_left -= 1
+        est = self.estimate_us(target, req) * self._shard_scale(target)
+        target.eta_us += est
+        self.placement[ticket] = target.name
+        self._tickets[(target.name, local)] = ticket
+        self._local[ticket] = local
+        self._eta_charged[ticket] = est
+
+    def _evict(self, dev: FleetDevice, out: List[Result]) -> None:
+        """Retire a device: flush its in-flight chunks (without retrying
+        on the dying device — stuck chunks resolve via ``DeviceTimeout``
+        straight to quarantine), quarantine the backlog that cannot move
+        (graph requests are pinned by device residency), and re-route the
+        dependency-free rest to the survivors."""
+        dev.state = "evicted"
+        dev.evicted_at = self._drains
+        sched = dev.scheduler
+        saved, sched.retry = sched.retry, None
+        try:
+            self._settle(dev, sched.collect(), out)
+        finally:
+            sched.retry = saved
+        for t in list(sched.pending_tickets):
+            req = sched._pending.get(t)
+            if req is not None and (req.deps or sched._dep_waiters.get(t)):
+                # cascades to its pending consumers via dep poisoning
+                sched._quarantine(req, KernelLaunchError(
+                    f"device {dev.name} evicted"))
+        for t in list(sched.pending_tickets):
+            req = sched.cancel(t)
+            ticket = self._tickets[(dev.name, t)]
+            dev.eta_us -= self._eta_charged.pop(ticket, 0.0)
+            target = self._healthiest(exclude=dev)
+            if target is not None and ticket not in self._served_tickets:
+                self._resubmit(ticket, req, target)
+            else:
+                self.quarantined.setdefault(ticket, Quarantined(
+                    req, KernelLaunchError(f"device {dev.name} evicted")))
+        self._harvest(dev, out)
+
+    def _healthiest(self, exclude: Optional[FleetDevice] = None
+                    ) -> Optional[FleetDevice]:
+        """The routable device with the best health score, excluding
+        ``exclude`` (the device being blamed); ``None`` when no other
+        device is routable — the caller quarantines instead."""
+        cands = [d for d in self.routable_devices() if d is not exclude]
+        return max(cands, key=lambda d: d.health, default=None)
+
+    def _healthiest_idle(self, exclude: Optional[FleetDevice] = None
+                         ) -> Optional[FleetDevice]:
+        """Hedge target: healthiest routable device with nothing pending
+        and nothing in flight — a hedge must never queue behind real
+        work, or the duplicate finishes after the straggler it insures."""
+        cands = [d for d in self.routable_devices()
+                 if d is not exclude and len(d.scheduler) == 0
+                 and d.scheduler.inflight_chunks == 0]
+        return max(cands, key=lambda d: d.health, default=None)
+
+    def _maybe_hedge(self) -> int:
+        """Fire straggler hedges: any dependency-free member of a chunk
+        in flight longer than ``hedge.after_s`` is duplicated (once per
+        fleet ticket) onto the healthiest idle device. First result wins
+        in ``_settle``; the loser is discarded there. Returns how many
+        hedges were fired this pass."""
+        hedge = self.resilience.hedge
+        if hedge is None:
+            return 0
+        fired = 0
+        now = time.monotonic()
+        for dev in self.devices:
+            if dev.state == "evicted":
+                continue
+            for chunk in dev.scheduler.inflight:
+                if now - chunk.t_dispatch < hedge.after_s:
+                    continue
+                for req in chunk.reqs:
+                    if req.deps:
+                        continue
+                    ticket = self._tickets.get((dev.name, req.ticket))
+                    if ticket is None or ticket in self._hedged \
+                            or ticket in self._served_tickets:
+                        continue
+                    target = self._healthiest_idle(exclude=dev)
+                    if target is None:
+                        return fired
+                    clone = Request(req.prog, req.mem0, req.n_items,
+                                    req.tag, req.priority, req.deadline_us,
+                                    out_region=req.out_region,
+                                    schedule=req.schedule, audit=req.audit)
+                    clone.arrival_s = req.arrival_s
+                    self._hedged.add(ticket)
+                    local = target.scheduler.submit_request(clone)
+                    # the duplicate maps to the SAME fleet ticket; the
+                    # placement/_local maps keep the original so graph
+                    # lookups are unaffected
+                    self._tickets[(target.name, local)] = ticket
+                    target.scheduler.dispatch()
+                    fired += 1
+        return fired
+
     def makespan_us(self) -> float:
         """Modeled fleet wall-clock: devices serve in parallel, so the
         slowest device's total service time bounds the trace."""
@@ -283,7 +612,7 @@ class Fleet:
         for name in self.placement.values():
             counts[name] += 1
         makespan = self.makespan_us()
-        return {
+        rep = {
             "devices": [d.name for d in self.devices],
             "placement": counts,
             "busy_us": {d.name: round(d.busy_us, 3) for d in self.devices},
@@ -299,6 +628,15 @@ class Fleet:
             "makespan_us": round(self.makespan_us(), 3),
             "quarantined": sorted(self.quarantined),
         }
+        if self.resilience is not None:
+            rep["health"] = {d.name: round(d.health, 3)
+                             for d in self.devices}
+            rep["device_state"] = {d.name: d.state for d in self.devices}
+            rep["faults"] = {d.name: d.faults for d in self.devices}
+            rep["served"] = {d.name: d.served for d in self.devices}
+            rep["reroutes"] = sum(self._reroutes.values())
+            rep["hedged"] = len(self._hedged)
+        return rep
 
 
 def pinned_makespan(cfg: GGPUConfig,

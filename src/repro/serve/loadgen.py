@@ -153,9 +153,17 @@ def replay(target, arrivals: Sequence[float],
     def settle(results: List) -> int:
         nonlocal done
         now = time.perf_counter() - t0
+        mono = time.monotonic()
         for res in results:
             i = ticket_of[res.info["ticket"]]
-            latencies[i] = now - arrivals[i]
+            if not np.isnan(latencies[i]):
+                continue  # already settled (a resilient target may hedge)
+            # a resilient fleet stamps when the result actually settled
+            # inside its drain; back the completion time up by that age
+            # so a drain that kept polling (e.g. waiting out a straggler)
+            # does not inflate everyone else's measured latency
+            age = mono - res.info.get("settled_s", mono)
+            latencies[i] = (now - age) - arrivals[i]
             done += 1
         for tk in target.quarantined:
             if tk in ticket_of and tk not in seen_quarantined:

@@ -44,9 +44,22 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import zlib
 from typing import NamedTuple, Optional, Tuple
 
 import numpy as np
+
+
+def result_checksum(mem) -> int:
+    """CRC32 of a result's memory words — the optional output audit a
+    ``Request`` may carry (``audit=``). A caller who knows the expected
+    output (e.g. a replayed trace, or any idempotent kernel) stamps the
+    fault-free checksum on the request; the scheduler then verifies every
+    collected result and treats a mismatch as a *corrupted* launch
+    (retried or quarantined, never silently returned). Cheap: one pass
+    over the downloaded words that were coming back anyway."""
+    return zlib.crc32(np.ascontiguousarray(
+        np.asarray(mem, np.int32)).tobytes())
 
 
 @functools.lru_cache(maxsize=4096)
@@ -82,6 +95,11 @@ class Request:
     out_region: Optional[Tuple[int, int]] = None  # download slice (lo, hi)
     deps: Tuple[Dep, ...] = ()   # producer edges (see module doc)
     schedule: str = ""           # lowering-schedule label ("" = unknown)
+    audit: Optional[int] = None  # expected result_checksum(mem) (or None)
+    attempts: int = 0            # completed re-dispatches (retry policy)
+    arrival_s: Optional[float] = None  # wall clock at admission (stamped
+    #                              by the scheduler; deadline-drop policies
+    #                              measure the latency budget from here)
 
     def __post_init__(self):
         self.prog = np.asarray(self.prog, np.int32)

@@ -10,8 +10,11 @@ called for every dependency-free submission (requests with ``deps`` are
 always pinned to their producers' device, regardless of router — device
 residency of graph edges is a correctness property, not a policy).
 Routers read the fleet's public estimate surface (``finish_us``,
-``estimate_us``, ``devices``) and must not mutate fleet state: the
-fleet itself charges the backlog after the pick.
+``estimate_us``, ``routable_devices``) and must not mutate fleet state:
+the fleet itself charges the backlog after the pick. Under a
+:class:`~repro.serve.fleet.FleetResilience` policy ``routable_devices``
+excludes evicted devices (and probation devices out of admission
+budget), so every router heals around a retired device for free.
 
 Built-ins:
 
@@ -33,7 +36,8 @@ class EarliestFinishRouter:
     """Greedy earliest-finish-time placement (see module doc)."""
 
     def pick(self, fleet, req):
-        return min(fleet.devices, key=lambda d: fleet.finish_us(d, req))
+        return min(fleet.routable_devices(),
+                   key=lambda d: fleet.finish_us(d, req))
 
 
 @ROUTERS.register("round-robin")
@@ -44,6 +48,7 @@ class RoundRobinRouter:
         self._next = 0
 
     def pick(self, fleet, req):
-        dev = fleet.devices[self._next % len(fleet.devices)]
+        devices = fleet.routable_devices()
+        dev = devices[self._next % len(devices)]
         self._next += 1
         return dev

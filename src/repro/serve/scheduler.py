@@ -55,6 +55,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
@@ -64,7 +65,7 @@ import numpy as np
 from repro.ggpu.engine import BlockPatch, GGPUConfig, KernelLaunchError
 from repro.registry import SCHEDULERS
 from repro.serve.executors import Executor, PendingChunk
-from repro.serve.request import Dep, Request, Result
+from repro.serve.request import Dep, Request, Result, result_checksum
 
 
 class AdmissionError(RuntimeError):
@@ -74,6 +75,37 @@ class AdmissionError(RuntimeError):
 class DependencyError(KernelLaunchError):
     """A launch was quarantined because a producer it depends on was —
     its input region would have been the failed producer's garbage."""
+
+
+class ChecksumError(KernelLaunchError):
+    """A collected result failed its request's output-checksum audit
+    (``Request.audit``): the launch ran to completion but produced
+    corrupted words — the silent-data-corruption failure mode an SEU
+    induces. ``device_fault`` marks the *device* as suspect (the program
+    is fine; a re-run elsewhere, or even here, normally passes)."""
+
+    device_fault = True
+
+
+class DeadlineExceeded(KernelLaunchError):
+    """A request's wall-clock latency budget (``deadline_us``, measured
+    from its admission stamp ``arrival_s``) expired before it was
+    dispatched; a preemptive deadline policy drops it to quarantine
+    instead of spending batch slots on a result nobody will accept."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry-with-backoff for failed or corrupted launches: a
+    blamed launch is re-staged and re-dispatched (with its chunk's
+    survivors) up to ``max_retries`` times before quarantine;
+    ``backoff_s`` sleeps ``backoff_s * attempt`` before each re-dispatch
+    (linear backoff — attempt 1 waits one unit, attempt 2 two). Retries
+    apply to max-steps failures, ``DeviceTimeout``, and ``ChecksumError``
+    audits alike; dependency poisoning is never retried (the producer's
+    output is gone for good)."""
+    max_retries: int = 2
+    backoff_s: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,7 +198,8 @@ class Scheduler:
     def __init__(self, cfg: Optional[GGPUConfig] = None, *,
                  executor: Optional[Executor] = None, max_batch: int = 64,
                  max_pending: Optional[int] = None, max_inflight: int = 8,
-                 mesh=None, device=None, policy="cohort"):
+                 mesh=None, device=None, policy="cohort",
+                 retry: Optional[RetryPolicy] = None):
         if (cfg is None) == (executor is None):
             raise ValueError("pass exactly one of cfg or executor")
         if executor is not None and (mesh is not None or device is not None):
@@ -189,6 +222,9 @@ class Scheduler:
         self.max_batch = max_batch
         self.max_pending = max_pending
         self.max_inflight = max_inflight
+        # bounded retry of failed/corrupted launches (None: quarantine on
+        # first failure — the pre-fault-model behavior, and the default)
+        self.retry = retry
         self._pending: Dict[int, Request] = {}   # ticket -> request (FIFO)
         self._next_ticket = 0
         self.quarantined: Dict[int, Quarantined] = {}
@@ -244,6 +280,10 @@ class Scheduler:
                 f"(max_pending={self.max_pending})")
         if req.deps:
             req.deps = tuple(self._resolve_dep(d) for d in req.deps)
+        if req.arrival_s is None:
+            # admission stamp: deadline-drop policies measure the
+            # wall-clock latency budget from here
+            req.arrival_s = time.monotonic()
         req.ticket = self._next_ticket
         self._next_ticket += 1
         self._pending[req.ticket] = req
@@ -330,6 +370,22 @@ class Scheduler:
             for chunk in chunks:
                 if budget is not None and taken >= budget:
                     break
+                if chunk.kind == "drop":
+                    # a preemptive policy (e.g. "deadline-drop") planned
+                    # these members out of the batch: quarantine them with
+                    # DeadlineExceeded instead of dispatching — they count
+                    # against the budget (taken off the queue) but never
+                    # occupy a device
+                    for r in (items[i] for i in chunk.members):
+                        if r.ticket in self._pending \
+                                and r.ticket not in self._inflight_tickets:
+                            taken += 1
+                            self._quarantine(r, DeadlineExceeded(
+                                f"ticket {r.ticket} missed its "
+                                f"{r.deadline_us}us deadline before "
+                                f"dispatch"))
+                            progress = True
+                    continue
                 try:
                     # shrink the window BEFORE dispatching so
                     # ``max_inflight`` bounds simultaneous in-flight
@@ -426,6 +482,66 @@ class Scheduler:
         out.sort(key=lambda r: r.info["ticket"])
         return out
 
+    # -- incremental collection (the fleet resilience surface) --------------
+
+    @property
+    def inflight(self) -> Tuple[PendingChunk, ...]:
+        """The dispatched-but-uncollected chunks, oldest first — the
+        read-only view a fleet's hedging policy scans for stragglers."""
+        return tuple(self._inflight)
+
+    def oldest_dispatch(self) -> float:
+        """Dispatch wall clock of the oldest in-flight chunk (``inf``
+        when nothing is in flight)."""
+        return self._inflight[0].t_dispatch if self._inflight \
+            else math.inf
+
+    def _resolvable(self, pending: PendingChunk) -> bool:
+        """Would collecting this chunk return without waiting on the
+        device? True when the device has finished it, or when it is
+        already past the executor timeout (collecting then raises
+        ``DeviceTimeout`` immediately — also no wait)."""
+        if self.executor.chunk_ready(pending):
+            return True
+        t = getattr(self.executor, "timeout_s", None)
+        return t is not None \
+            and time.monotonic() - pending.t_dispatch >= t
+
+    def collect_ready(self) -> List[Result]:
+        """Resolve only the in-flight chunks that are already finished
+        (or past the executor timeout), never blocking on the rest —
+        the readiness-ordered collection a resilient fleet drains with,
+        so one straggling device never serializes the others'
+        collections. Returns the results completed by this call, ticket
+        order; unfinished chunks keep their relative (dispatch) order."""
+        try:
+            for _ in range(len(self._inflight)):
+                if self._resolvable(self._inflight[0]):
+                    self._collect_oldest()
+                else:
+                    self._inflight.rotate(-1)
+        except BaseException:
+            self._abandon_inflight()
+            raise
+        out, self._completed = self._completed, []
+        out.sort(key=lambda r: r.info["ticket"])
+        return out
+
+    def collect_step(self) -> List[Result]:
+        """Blocking-collect the single oldest in-flight chunk — the
+        guaranteed-progress move a resilient fleet makes when nothing is
+        resolvable anywhere. Returns the results it completed."""
+        if not self._inflight:
+            return []
+        try:
+            self._collect_oldest()
+        except BaseException:
+            self._abandon_inflight()
+            raise
+        out, self._completed = self._completed, []
+        out.sort(key=lambda r: r.info["ticket"])
+        return out
+
     def drain(self, budget: Optional[int] = None) -> List[Result]:
         """Serve pending work: plan chunks over the current pending set and
         execute them in planned order until ``budget`` launches have been
@@ -511,35 +627,84 @@ class Scheduler:
                 self._quarantine(self._pending[ticket], DependencyError(
                     f"producer ticket {req.ticket} was quarantined"))
 
+    def _retryable(self, req: Request, exc: KernelLaunchError) -> bool:
+        """May this blamed launch be re-staged and re-dispatched? Only
+        under a retry policy with budget left, never for dependency
+        poisoning (the producer's output is gone), and only while every
+        producer it needs is still resident (its patches can be
+        rebuilt)."""
+        if self.retry is None or req.attempts >= self.retry.max_retries:
+            return False
+        if isinstance(exc, DependencyError) or req.ticket in self._poisoned:
+            return False
+        return all(d.producer in self._resident for d in req.deps)
+
+    def _backoff(self, attempt: int) -> None:
+        if self.retry is not None and self.retry.backoff_s:
+            time.sleep(self.retry.backoff_s * max(1, attempt))
+
     def _collect_quarantining(self, pending: PendingChunk) -> List[Result]:
-        """Collect one chunk; on failure isolate the blamed launch into
-        ``quarantined`` and re-dispatch the survivors until the chunk
-        completes. Survivor results stay bit-exact: cohort/batch folding
-        is per-launch exact at any membership, and survivors with
-        dependencies rebuild their patches from the still-resident
-        producer handles (a consumer in flight keeps its producers
-        resident, so the rebuild always finds them)."""
+        """Collect one chunk; on failure isolate the blamed launch(es)
+        and re-dispatch the survivors until the chunk completes. Survivor
+        results stay bit-exact: cohort/batch folding is per-launch exact
+        at any membership, and survivors with dependencies rebuild their
+        patches from the still-resident producer handles (a consumer in
+        flight keeps its producers resident, so the rebuild always finds
+        them).
+
+        Under a ``RetryPolicy``, a blamed launch with retry budget left is
+        *re-staged and re-dispatched with the survivors* instead of
+        quarantined (its ``attempts`` counter moves) — this covers
+        max-steps failures, whole-chunk ``DeviceTimeout``
+        (``exc.index is None``: every member is blamed), and the
+        per-result output-checksum audit: a result whose words fail
+        ``Request.audit`` is never returned, it is retried or quarantined
+        as a ``ChecksumError``. Without a policy the behavior is the
+        original quarantine-on-first-failure, unchanged."""
         out: List[Result] = []
         while True:
             reqs = pending.reqs
             try:
                 results = self.executor.collect(pending)
             except KernelLaunchError as exc:
-                bad = reqs[exc.index]
-                survivors = reqs[:exc.index] + reqs[exc.index + 1:]
-                self._poisoned.pop(bad.ticket, None)
-                self._quarantine(bad, exc)
+                idx = getattr(exc, "index", 0)
+                blamed = list(reqs) if idx is None else [reqs[idx]]
+                keep = []
+                for bad in blamed:
+                    if self._retryable(bad, exc):
+                        bad.attempts += 1
+                        keep.append(bad)
+                    else:
+                        self._poisoned.pop(bad.ticket, None)
+                        self._quarantine(bad, exc)
+                if keep:
+                    self._backoff(max(r.attempts for r in keep))
+                survivors = [r for r in reqs
+                             if r.ticket in self._pending
+                             and r.ticket not in self.quarantined]
                 if not survivors:
                     return out
                 pending = self.executor.submit(
                     pending.kind, survivors, self._chunk_patches(survivors))
                 self._note_dispatched(pending)
                 continue
+            redo: List[Request] = []
             for req, res in zip(reqs, results):
                 producer = self._poisoned.pop(req.ticket, None)
                 if producer is not None:
                     self._quarantine(req, DependencyError(
                         f"producer ticket {producer} was quarantined"))
+                    continue
+                if req.audit is not None \
+                        and result_checksum(res.mem) != req.audit:
+                    exc = ChecksumError(
+                        f"ticket {req.ticket} failed its output-checksum "
+                        f"audit (attempt {req.attempts + 1})")
+                    if self._retryable(req, exc):
+                        req.attempts += 1
+                        redo.append(req)
+                    else:
+                        self._quarantine(req, exc)
                     continue
                 res.info["ticket"] = req.ticket
                 if req.tag:
@@ -547,7 +712,13 @@ class Scheduler:
                 del self._pending[req.ticket]
                 self._release_deps(req)
                 out.append(res)
-            return out
+            if not redo:
+                return out
+            self._backoff(max(r.attempts for r in redo))
+            pending = self.executor.submit(
+                pending.kind if len(redo) > 1 else "single", redo,
+                self._chunk_patches(redo))
+            self._note_dispatched(pending)
 
 
 class LaunchQueue:

@@ -33,12 +33,19 @@ def compiler_base():
     return json.loads((BASELINES / "BENCH_compiler.json").read_text())
 
 
+@pytest.fixture(scope="module")
+def resilience_base():
+    return json.loads((BASELINES / "BENCH_resilience.json").read_text())
+
+
 def test_baselines_pass_against_themselves(dse_base, serve_base,
-                                           compiler_base):
+                                           compiler_base, resilience_base):
     assert check_artifacts(copy.deepcopy(dse_base), dse_base) == []
     assert check_artifacts(copy.deepcopy(serve_base), serve_base) == []
     assert check_artifacts(copy.deepcopy(compiler_base),
                            compiler_base) == []
+    assert check_artifacts(copy.deepcopy(resilience_base),
+                           resilience_base) == []
 
 
 def test_injected_cycle_regression_fails(dse_base):
@@ -226,6 +233,123 @@ def test_section_flag_cli(tmp_path, serve_base):
     bad = tmp_path / "graph_bad.json"
     bad.write_text(json.dumps(partial))
     assert main([str(bad), baseline, "--section", "graph"]) == 1
+
+
+def test_serve_async_gate_is_report_only_below_two_cpus(serve_base):
+    """On a 1-CPU host there is no second core for the pipelined drain
+    to overlap onto: the speedup is recorded in the artifact but the
+    async gate must not bind (``host_cpus`` marks the run)."""
+    from benchmarks.serve_bench import ASYNC_MIN_SPEEDUP
+    fresh = copy.deepcopy(serve_base)
+    fresh["async_speedup"] = ASYNC_MIN_SPEEDUP - 0.1
+    fresh["n_devices"] = 1
+    fresh["sharded"]["bit_exact"] = True
+    fresh["host_cpus"] = 1
+    violations = check_artifacts(fresh, serve_base)
+    assert not any("async_speedup" in v for v in violations), violations
+    # with >= 2 host CPUs (and on legacy artifacts with no marker,
+    # which default to gated) the same speedup fails
+    fresh["host_cpus"] = 2
+    assert any("async_speedup" in v
+               for v in check_artifacts(fresh, serve_base))
+    del fresh["host_cpus"]
+    assert any("async_speedup" in v
+               for v in check_artifacts(fresh, serve_base))
+
+
+def test_resilience_baseline_invariants_hold(resilience_base):
+    """The committed chaos baseline satisfies the absolute resilience
+    invariants: served-correctly floor, zero silent corruption, bounded
+    goodput degradation, eviction fired, hedging beats no-hedging."""
+    from benchmarks.resilience_bench import (MIN_GOODPUT_RATIO,
+                                             MIN_SERVED_CORRECT,
+                                             invariant_problems)
+    assert invariant_problems(resilience_base) == []
+    assert resilience_base["served_correct_fraction"] >= MIN_SERVED_CORRECT
+    assert resilience_base["silently_corrupted"] == 0
+    assert resilience_base["goodput_ratio"] >= MIN_GOODPUT_RATIO
+    assert resilience_base["device_loss"]["evicted"] is True
+    assert resilience_base["device_loss"]["lost"] == 0
+    assert resilience_base["straggler"]["hedged"]["p99_ms"] \
+        < resilience_base["straggler"]["unhedged"]["p99_ms"]
+    assert resilience_base["straggler"]["hedges_fired"] > 0
+    assert resilience_base["hedge_p99_speedup"] > 1.0
+
+
+def test_resilience_silent_corruption_fails(resilience_base):
+    """One silently-served corrupted result fails the gate absolutely —
+    the zero-corruption invariant plus the exact count comparison."""
+    fresh = copy.deepcopy(resilience_base)
+    fresh["seu"]["silently_corrupted"] = 1
+    violations = check_artifacts(fresh, resilience_base)
+    assert any("silently_corrupted" in v for v in violations), violations
+
+
+def test_resilience_counts_are_exact_not_banded(resilience_base):
+    """Fault decisions are pure hashes of (seed, kind, ticket, attempt),
+    so the injection/served counts are deterministic at the committed
+    seed — a drift of 1 fails."""
+    fresh = copy.deepcopy(resilience_base)
+    fresh["seu"]["injections"] += 1
+    assert any("seu.injections" in v
+               for v in check_artifacts(fresh, resilience_base))
+    fresh = copy.deepcopy(resilience_base)
+    fresh["device_loss"]["device_state"] = {"dev0": "active",
+                                            "dev1": "active"}
+    violations = check_artifacts(fresh, resilience_base)
+    assert any("device_state" in v for v in violations), violations
+
+
+def test_resilience_hedge_and_eviction_gates(resilience_base):
+    fresh = copy.deepcopy(resilience_base)
+    fresh["straggler"]["hedged"]["p99_ms"] = \
+        fresh["straggler"]["unhedged"]["p99_ms"] + 1
+    violations = check_artifacts(fresh, resilience_base)
+    assert any("hedg" in v for v in violations), violations
+    fresh = copy.deepcopy(resilience_base)
+    fresh["device_loss"]["evicted"] = False
+    violations = check_artifacts(fresh, resilience_base)
+    assert any("evicted" in v for v in violations), violations
+    fresh = copy.deepcopy(resilience_base)
+    fresh["device_loss"]["lost"] = 2
+    violations = check_artifacts(fresh, resilience_base)
+    assert any("lost" in v for v in violations), violations
+
+
+def test_resilience_goodput_band_and_floor(resilience_base):
+    """goodput_ratio is wall-clock-derived: it gets the host ratio band,
+    but collapsing below the absolute floor fails regardless."""
+    from benchmarks.resilience_bench import MIN_GOODPUT_RATIO
+    fresh = copy.deepcopy(resilience_base)
+    floor = MIN_GOODPUT_RATIO + 0.01
+    if resilience_base["seu"]["goodput_ratio"] > floor:
+        fresh["seu"]["goodput_ratio"] = floor        # within band + floor
+        fresh["goodput_ratio"] = floor
+        assert not any("goodput" in v
+                       for v in check_artifacts(fresh, resilience_base))
+    fresh["seu"]["goodput_ratio"] = MIN_GOODPUT_RATIO / 2
+    fresh["goodput_ratio"] = MIN_GOODPUT_RATIO / 2
+    violations = check_artifacts(fresh, resilience_base)
+    assert any("goodput_ratio" in v for v in violations), violations
+
+
+def test_resilience_section_flag(tmp_path, resilience_base):
+    """``--section resilience`` is what the resilience-smoke job runs;
+    an unknown section on a resilience artifact is a clean failure."""
+    assert check_artifacts(copy.deepcopy(resilience_base),
+                           resilience_base, section="resilience") == []
+    violations = check_artifacts(copy.deepcopy(resilience_base),
+                                 resilience_base, section="nope")
+    assert violations == ["unknown resilience section 'nope'"]
+    baseline = str(BASELINES / "BENCH_resilience.json")
+    good = tmp_path / "res.json"
+    good.write_text(json.dumps(resilience_base))
+    assert main([str(good), baseline, "--section", "resilience"]) == 0
+    bad_art = copy.deepcopy(resilience_base)
+    bad_art["seu"]["silently_corrupted"] = 3
+    bad = tmp_path / "res_bad.json"
+    bad.write_text(json.dumps(bad_art))
+    assert main([str(bad), baseline, "--section", "resilience"]) == 1
 
 
 def test_compiler_tuned_cycle_regression_fails(compiler_base):

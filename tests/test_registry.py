@@ -9,8 +9,8 @@ import sys
 
 import pytest
 
-from repro.registry import (AXES, BENCHES, MEMSYS, ROUTERS, SCHEDULERS,
-                            SECTIONS, TRAFFIC)
+from repro.registry import (AXES, BENCHES, FAULTS, MEMSYS, ROUTERS,
+                            SCHEDULERS, SECTIONS, TRAFFIC)
 from repro.registry.core import (Axis, DuplicateNameError, RegistryError,
                                  UnknownPluginError, resolve)
 
@@ -110,8 +110,10 @@ def test_all_axes_discover_builtins():
     assert {"cohort", "fifo"} <= set(SCHEDULERS.names())
     assert {"earliest-finish", "round-robin"} <= set(ROUTERS.names())
     assert {"poisson", "bursty"} <= set(TRAFFIC.names())
+    assert {"none", "seu", "straggler", "device-loss"} \
+        <= set(FAULTS.names())
     assert {"dse", "serve", "compiler", "graph", "fleet",
-            "engine"} <= set(SECTIONS.names())
+            "engine", "resilience"} <= set(SECTIONS.names())
     for name, axis in AXES.items():
         assert len(axis) > 0, f"axis {name} is empty"
 
@@ -229,10 +231,13 @@ def test_smoke_matrix_covers_legacy_smoke_jobs():
 
     m = smoke_matrix()
     rows = {e["section"]: e for e in m["include"]}
-    assert {"dse", "serve", "compiler", "graph", "fleet"} <= set(rows)
+    assert {"dse", "serve", "compiler", "graph", "fleet",
+            "resilience"} <= set(rows)
     assert "engine" not in rows                 # ci_smoke=False
     assert rows["graph"]["check_args"] == "--section graph"
     assert rows["graph"]["baseline"].endswith("BENCH_serve.json")
+    assert rows["resilience"]["check_args"] == "--section resilience"
+    assert rows["resilience"]["baseline"].endswith("BENCH_resilience.json")
     assert "device_count=8" in rows["fleet"]["xla_flags"]
     assert rows["fleet"]["artifact_name"] == "BENCH_serve-sharded"
     for e in m["include"]:
@@ -245,8 +250,9 @@ def test_nightly_matrix_is_full_cross_product():
 
     m = nightly_matrix()
     cells = [e for e in m["include"] if e["kind"] == "cell"]
-    combos = {(e["memsys"], e["policy"], e["router"]) for e in cells}
-    want = len(MEMSYS) * len(SCHEDULERS) * len(ROUTERS)
+    combos = {(e["memsys"], e["policy"], e["router"], e["fault"])
+              for e in cells}
+    want = len(MEMSYS) * len(SCHEDULERS) * len(ROUTERS) * len(FAULTS)
     assert len(cells) == len(combos) == want
     sweeps = [e for e in m["include"] if e["kind"] == "sweep"]
     assert any("--compiler" in e["run_args"] for e in sweeps)

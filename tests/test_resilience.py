@@ -1,0 +1,297 @@
+"""Serve-side resilience: checksum audits + bounded retry, stuck-device
+timeouts, fleet health/eviction/re-routing/probation, deadline-aware
+hedged dispatch with first-result-wins (abandoned losers), settle-time
+stamping, and the preemptive ``deadline-drop`` scheduling policy."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.faults import FaultInjector, FaultPlan
+from repro.registry import FAULTS
+from repro.ggpu import programs
+from repro.ggpu.engine import GGPUConfig, run_kernel
+from repro.serve import Fleet, Request, Scheduler
+from repro.serve.fleet import FleetResilience, HedgePolicy
+from repro.serve.request import result_checksum
+from repro.serve.scheduler import (ChecksumError, DeadlineExceeded,
+                                   RetryPolicy)
+
+CFG = GGPUConfig(n_cus=2)
+
+
+def _bench():
+    return programs._copy(16, 128)
+
+
+def _mems(b, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(-30, 30, b.gpu_mem.shape[0]).astype(np.int32)
+            for _ in range(n)]
+
+
+def _audited(b, m):
+    ref = run_kernel(b.gpu_prog, m, b.gpu_items, CFG)
+    return Request(b.gpu_prog, m, b.gpu_items,
+                   audit=result_checksum(ref[0])), ref
+
+
+# ------------------------------------------- audit + retry (scheduler)
+
+def _transient_seed():
+    """A seed where ticket 0's first attempt takes post-compute SDC and
+    its retry doesn't — the transient-fault shape a real SEU has."""
+    for seed in range(200):
+        p = FaultPlan(seed=seed, seu_post_rate=0.5)
+        if p.post_hit(0, 0) and not p.post_hit(0, 1):
+            return seed
+    raise AssertionError("no transient seed in range")
+
+
+def test_audit_catches_sdc_and_retry_serves_clean_result():
+    b = _bench()
+    m = _mems(b, 1)[0]
+    req, ref = _audited(b, m)
+    plan = FaultPlan(seed=_transient_seed(), seu_post_rate=0.5)
+    s = Scheduler(CFG, retry=RetryPolicy(max_retries=2))
+    inj = FaultInjector("d", s.executor, plan)
+    s.executor = inj
+    s.submit_request(req)
+    (res,) = s.flush()
+    np.testing.assert_array_equal(res.mem, ref[0])  # clean after retry
+    assert req.attempts == 1
+    assert [e[0] for e in inj.injected] == ["sdc"]
+    assert not s.quarantined
+
+
+def test_hard_corruption_quarantined_never_served():
+    """Rate-1.0 SDC corrupts every attempt: with an audit the launch is
+    quarantined as ChecksumError after exhausting retries — a corrupted
+    result is never returned."""
+    b = _bench()
+    m = _mems(b, 1)[0]
+    req, _ = _audited(b, m)
+    plan = FaultPlan(seed=0, seu_post_rate=1.0)
+    s = Scheduler(CFG, retry=RetryPolicy(max_retries=2))
+    s.executor = FaultInjector("d", s.executor, plan)
+    s.submit_request(req)
+    assert s.flush() == []
+    (q,) = s.quarantined.values()
+    assert isinstance(q.error, ChecksumError)
+    assert type(q.error).device_fault       # blamed on the device
+    assert req.attempts == 2                # budget was really spent
+
+
+def test_without_audit_corruption_is_silent():
+    """The same rate-1.0 SDC with no audit sails through — the failure
+    mode the checksum machinery exists for."""
+    b = _bench()
+    m = _mems(b, 1)[0]
+    ref = run_kernel(b.gpu_prog, m, b.gpu_items, CFG)
+    s = Scheduler(CFG)
+    s.executor = FaultInjector("d", s.executor,
+                               FaultPlan(seed=0, seu_post_rate=1.0))
+    s.submit(b.gpu_prog, m, b.gpu_items)
+    (res,) = s.flush()
+    assert not np.array_equal(res.mem, ref[0])   # silently corrupted
+
+
+# -------------------------------------------------- stuck device (timeout)
+
+def test_stuck_device_quarantines_via_timeout():
+    from repro.serve.executors import DeviceTimeout
+    b = _bench()
+    plan = FaultPlan(seed=0, stuck_devices=("d",), stuck_after=0)
+    s = Scheduler(GGPUConfig(n_cus=2), max_batch=4)
+    s.executor.timeout_s = 0.05
+    s.executor = FaultInjector("d", s.executor, plan)
+    t = s.submit(b.gpu_prog, b.gpu_mem, b.gpu_items)
+    assert s.flush() == []
+    assert isinstance(s.quarantined[t].error, DeviceTimeout)
+
+
+# ------------------------------------------------- fleet self-healing
+
+def _loss_fleet(n=6, timeout_s=0.15, router="earliest-finish"):
+    sc = FAULTS.get("device-loss")(seed=0, stuck_after=0,
+                                   timeout_s=timeout_s)
+    fleet = Fleet([("dev0", GGPUConfig(n_cus=1)), ("dev1", CFG)],
+                  max_batch=4, router=router, **sc.fleet_kwargs())
+    b = _bench()
+    refs = {}
+    for m in _mems(b, n):
+        req, ref = _audited(b, m)
+        refs[fleet.submit_request(req)] = ref
+    return fleet, refs, sc
+
+
+def test_device_loss_evicts_and_reroutes_backlog():
+    """dev0 wedges on its first dispatch: timeouts exhaust the retry
+    budget, consecutive faults evict it, and its backlog re-routes to
+    dev1 — everything is served bit-exact, nothing quarantined."""
+    fleet, refs, _ = _loss_fleet()
+    results = fleet.drain()
+    assert fleet.devices[0].state == "evicted"
+    assert not fleet.quarantined
+    assert sorted(r.info["ticket"] for r in results) == sorted(refs)
+    for res in results:
+        assert res.info["device"] == "dev1"
+        np.testing.assert_array_equal(res.mem,
+                                      refs[res.info["ticket"]][0])
+    rep = fleet.report()
+    assert rep["device_state"] == {"dev0": "evicted", "dev1": "active"}
+    assert rep["reroutes"] > 0
+    assert rep["faults"]["dev0"] > 0 and rep["faults"]["dev1"] == 0
+    assert rep["health"]["dev0"] < rep["health"]["dev1"]
+
+
+def test_probation_readmission_and_promotion():
+    """An evicted device is re-admitted on probation after the cooldown;
+    still-faulty, it is re-evicted on its first new fault; healed (the
+    plan swapped for an inactive one), a clean probation drain promotes
+    it back to active."""
+    fleet, _, sc = _loss_fleet(router="round-robin")
+    fleet.drain()
+    dev0 = fleet.devices[0]
+    assert dev0.state == "evicted"
+    b = _bench()
+
+    def serve_pair(seed):
+        # two requests per drain: round-robin lands one on each routable
+        # device, so a probation dev0 always sees real work
+        for i in range(2):
+            req, _ = _audited(b, _mems(b, 1, seed=seed + 100 * i)[0])
+            fleet.submit_request(req)
+        fleet.drain()
+
+    # cooldown: probation_after drains must pass before re-admission
+    cooldown = fleet.resilience.probation_after
+    for i in range(cooldown):
+        serve_pair(seed=10 + i)
+        assert dev0.state == "evicted"
+    # routing happens at submit time, so re-admission must land before
+    # the next submissions: an empty drain flips dev0 to probation
+    fleet.drain()
+    assert dev0.state == "probation" and dev0.probation_left > 0
+    # it is still stuck, so its first probation fault re-evicts it
+    # (probation tolerates exactly zero faults)
+    serve_pair(seed=20)
+    assert dev0.state == "evicted"
+    assert dev0.faults >= 3
+    assert not fleet.quarantined        # every re-route still served
+    # heal the device: swap every injector to an inactive plan
+    for inj in sc.injectors:
+        inj.plan = FaultPlan(seed=0)
+    for i in range(cooldown):
+        serve_pair(seed=30 + i)
+    fleet.drain()                       # re-admission drain
+    assert dev0.state == "probation"
+    # probation again — a clean served result promotes dev0 to active
+    serve_pair(seed=40)
+    assert dev0.state == "active"
+    assert dev0.consecutive_faults == 0 and dev0.served > 0
+
+
+# ---------------------------------------------------- hedged dispatch
+
+def test_hedge_wins_and_loser_is_abandoned_then_discarded():
+    """A straggling chunk is hedged onto the idle clean device; the
+    hedge result wins the fleet ticket, the drain returns *before* the
+    straggler's hold expires (the loser is abandoned in flight), and a
+    later drain discards the loser's result."""
+    b = _bench()
+    m = _mems(b, 1)[0]
+    ref = run_kernel(b.gpu_prog, m, b.gpu_items, CFG)
+    plan = FaultPlan(seed=0, straggler_rate=1.0, straggler_delay_s=0.6)
+
+    def wrap(name, ex):
+        return FaultInjector(name, ex, plan) if name == "dev0" else ex
+
+    fleet = Fleet([("dev0", CFG), ("dev1", CFG)], max_batch=1,
+                  resilience=FleetResilience(
+                      hedge=HedgePolicy(after_s=0.03)),
+                  timeout_s=5.0, executor_wrap=wrap)
+    t = fleet.submit(b.gpu_prog, m, b.gpu_items)
+    t0 = time.monotonic()
+    (res,) = fleet.drain()
+    elapsed = time.monotonic() - t0
+    assert res.info["ticket"] == t
+    assert res.info["device"] == "dev1"       # the hedge won
+    np.testing.assert_array_equal(res.mem, ref[0])
+    assert elapsed < 0.5                      # did not wait out the hold
+    assert "settled_s" in res.info            # open-loop settle stamp
+    assert res.info["settled_s"] <= time.monotonic()
+    assert fleet.report()["hedged"] == 1
+    # the loser is still in flight, abandoned
+    assert fleet.devices[0].scheduler.inflight_chunks == 1
+    time.sleep(0.7)                           # hold expires
+    assert fleet.drain() == []                # loser collected, discarded
+    assert fleet.devices[0].scheduler.inflight_chunks == 0
+    assert not fleet.quarantined
+
+
+def test_hedge_fires_at_most_once_per_ticket():
+    b = _bench()
+    plan = FaultPlan(seed=0, straggler_rate=1.0, straggler_delay_s=0.3)
+
+    def wrap(name, ex):
+        return FaultInjector(name, ex, plan) if name == "dev0" else ex
+
+    fleet = Fleet([("dev0", CFG), ("dev1", CFG)], max_batch=1,
+                  resilience=FleetResilience(
+                      hedge=HedgePolicy(after_s=0.02)),
+                  timeout_s=5.0, executor_wrap=wrap)
+    tickets = [fleet.submit(b.gpu_prog, m, b.gpu_items)
+               for m in _mems(b, 3)]
+    results = fleet.drain()
+    assert sorted(r.info["ticket"] for r in results) == tickets
+    assert fleet.report()["hedged"] <= len(tickets)
+    assert len(fleet._hedged) == len(set(fleet._hedged))
+
+
+# ------------------------------------------------ deadline-drop policy
+
+def test_deadline_drop_plans_expired_requests_out():
+    from repro.registry import SCHEDULERS
+    plan = SCHEDULERS.get("deadline-drop")
+    b = _bench()
+    fresh = Request(b.gpu_prog, b.gpu_mem, b.gpu_items)
+    fresh.arrival_s = time.monotonic()
+    expired = Request(b.gpu_prog, _mems(b, 1)[0], b.gpu_items,
+                      deadline_us=1.0)
+    expired.arrival_s = time.monotonic() - 1.0   # 1s ago >> 1us budget
+    chunks = plan([fresh, expired], CFG, 4)
+    assert chunks[0].kind == "drop" and chunks[0].members == (1,)
+    assert [c.members for c in chunks[1:]] == [(0,)]
+    # without deadlines the plan is exactly the cohort plan
+    from repro.serve import plan_chunks
+    reqs = [Request(b.gpu_prog, m, b.gpu_items) for m in _mems(b, 3)]
+    assert [(c.kind, c.members) for c in plan(reqs, CFG, 4)] \
+        == [(c.kind, c.members) for c in plan_chunks(reqs, CFG, 4)]
+
+
+def test_deadline_drop_scheduler_quarantines_expired():
+    b = _bench()
+    s = Scheduler(CFG, policy="deadline-drop")
+    t_ok = s.submit(b.gpu_prog, b.gpu_mem, b.gpu_items)
+    t_late = s.submit(b.gpu_prog, _mems(b, 1)[0], b.gpu_items,
+                      deadline_us=50.0)
+    time.sleep(0.01)                        # 10ms >> the 50us budget
+    results = s.flush()
+    assert [r.info["ticket"] for r in results] == [t_ok]
+    assert isinstance(s.quarantined[t_late].error, DeadlineExceeded)
+    # no-deadline traffic is never dropped, however stale
+    t2 = s.submit(b.gpu_prog, b.gpu_mem, b.gpu_items)
+    time.sleep(0.01)
+    assert [r.info["ticket"] for r in s.flush()] == [t2]
+
+
+def test_deadline_drop_in_fleet():
+    b = _bench()
+    fleet = Fleet([("dev0", CFG)], policy="deadline-drop")
+    t = fleet.submit(b.gpu_prog, b.gpu_mem, b.gpu_items, deadline_us=50.0)
+    t2 = fleet.submit(b.gpu_prog, _mems(b, 1)[0], b.gpu_items)
+    time.sleep(0.01)
+    results = fleet.drain()
+    assert [r.info["ticket"] for r in results] == [t2]
+    assert isinstance(fleet.quarantined[t].error, DeadlineExceeded)
